@@ -1,0 +1,119 @@
+"""Shared benchmark infrastructure.
+
+Trains (once, cached to experiments/models/) a tiny byte-level model per
+task family, builds its learning-free tables, and provides tokens/call
+measurement — the paper's primary metric.  Wall-time *speedups* for the
+paper-scale models are derived from the TPU-v5e roofline call-cost model
+(core/phase.py), since this container has no accelerator; CPU wall-time is
+also reported for the tiny models as a sanity signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ngram_tables import NGramTables, build_bigram, build_unigram
+from repro.core.spec_engine import SpecConfig, generate
+from repro.data.datasets import make_prompts
+from repro.data.pipeline import packed_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train import AdamWConfig, init_train_state, make_train_step
+from repro.train.checkpoint import load, save
+
+MODEL_DIR = "experiments/models"
+TASKS = ("code", "math", "chat")
+
+# Tiny stand-ins for the paper's {Phi3B, Mistral7B, Vicuna13B} lineup: same
+# experiment structure, CPU-trainable scale.
+SIZES = {
+    "tiny-31m": dict(num_layers=2, d_model=128, d_ff=256),
+    "tiny-59m": dict(num_layers=3, d_model=160, d_ff=384),
+}
+DEFAULT_SIZE = "tiny-31m"
+
+
+def bench_config(size: str = DEFAULT_SIZE) -> ModelConfig:
+    kw = SIZES[size]
+    return ModelConfig(name=f"bench-{size}", num_heads=4, num_kv_heads=2,
+                       vocab_size=259, param_dtype=jnp.float32,
+                       compute_dtype=jnp.float32, **kw).validate()
+
+
+def get_trained(size: str = DEFAULT_SIZE, steps: int = 120,
+                seed: int = 0) -> Tuple[ModelConfig, Dict]:
+    """Train (or load cached) the benchmark model on the 3-task mixture."""
+    cfg = bench_config(size)
+    path = os.path.join(MODEL_DIR, f"{cfg.name}.npz")
+    ts = init_train_state(jax.random.PRNGKey(seed), cfg)
+    if os.path.exists(path):
+        return cfg, load(path, ts["params"])
+    from repro.data.pipeline import mixed_batches
+    step = jax.jit(make_train_step(cfg, AdamWConfig(
+        lr=1e-3, total_steps=steps, warmup_steps=10)))
+    for b in mixed_batches(8, 128, steps, seed=seed):
+        ts, metrics = step(ts, jnp.asarray(b))
+    save(path, ts["params"])
+    print(f"  trained {cfg.name}: loss={float(metrics['loss']):.3f}")
+    return cfg, ts["params"]
+
+
+_TABLE_CACHE: Dict[str, NGramTables] = {}
+
+
+def get_tables(cfg: ModelConfig, params, k_max: int = 32,
+               w_max: int = 16) -> NGramTables:
+    key = f"{cfg.name}-{k_max}-{w_max}"
+    if key not in _TABLE_CACHE:
+        fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+        topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=k_max,
+                                   w_max=w_max, batch=259)
+        uni = build_unigram(params["embed"]["embedding"],
+                            params["embed"]["lm_head"], k_max=k_max)
+        _TABLE_CACHE[key] = NGramTables(uni, topk, chain)
+    return _TABLE_CACHE[key]
+
+
+def task_prompts(task: str, n: int, prompt_len: int = 48) -> jnp.ndarray:
+    tok = ByteTokenizer()
+    texts = [p for p, _ in make_prompts(task, n, seed=1)]
+    return jnp.asarray(tok.encode_batch(texts, prompt_len))
+
+
+@dataclasses.dataclass
+class RunResult:
+    tokens_per_call: float
+    new_tokens: int
+    calls: int
+    wall_s: float
+    stats: Dict[str, np.ndarray]
+
+
+def measure(cfg, params, tables, task: str, spec: SpecConfig,
+            n_prompts: int = 8, prompt_len: int = 48) -> RunResult:
+    prompts = task_prompts(task, n_prompts, prompt_len)
+    fn = jax.jit(lambda p, t, tbl: generate(p, cfg, spec, t, tbl))
+    buf, blen, stats = fn(params, prompts, tables)   # compile
+    buf.block_until_ready()
+    t0 = time.perf_counter()
+    buf, blen, stats = fn(params, prompts, tables)
+    buf.block_until_ready()
+    wall = time.perf_counter() - t0
+    stats = {k: np.asarray(v) for k, v in stats.items()}
+    calls = int(stats["calls"].sum())
+    tokens = int(stats["tokens"].sum())
+    return RunResult(tokens_per_call=tokens / max(calls, 1),
+                     new_tokens=tokens, calls=calls, wall_s=wall,
+                     stats=stats)
+
+
+def ensure_dirs():
+    os.makedirs(MODEL_DIR, exist_ok=True)
+    os.makedirs("experiments/results", exist_ok=True)

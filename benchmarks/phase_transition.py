@@ -1,0 +1,52 @@
+"""Figure 1 reproduction: memory-bound -> compute-bound phase transition.
+
+The paper measures call slowdown of Mistral-7B on an A100 for
+(k, w) in {1..32}x{0..15} at context lengths {25, 100, 500}.  We derive the
+TPU-v5e analogue analytically from the per-matmul roofline (core/phase.py):
+slowdown(k, w | ell) = T(k, w+1) / T(1, 1).  Wave quantization (an SM
+artefact) has no TPU analogue; the crossover here is the MXU ops:byte knee.
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+from repro.configs import get_config
+from repro.core.phase import slowdown
+
+ELLS = (25, 100, 500, 4096, 32768)
+KS = (1, 2, 4, 8, 16, 25, 32)
+WS = (0, 1, 2, 4, 8, 10, 14)
+
+
+def run(out_dir: str = "experiments/results") -> dict:
+    cfg = get_config("mistral-7b")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "fig1_phase_transition.csv")
+    rows = []
+    with open(path, "w", newline="") as f:
+        wr = csv.writer(f)
+        wr.writerow(["ell", "k", "w", "slowdown_shared_cache",
+                     "slowdown_paper_layout"])
+        for ell in ELLS:
+            for k in KS:
+                for w in WS:
+                    s_b = slowdown(cfg, ell, k, w, shared_cache=True)
+                    s_p = slowdown(cfg, ell, k, w, shared_cache=False)
+                    wr.writerow([ell, k, w, f"{s_b:.4f}", f"{s_p:.4f}"])
+                    rows.append((ell, k, w, s_b, s_p))
+    # headline numbers: where does (k,w)=(10,10) stop being ~free?
+    free = {ell: slowdown(cfg, ell, 10, 10) for ell in ELLS}
+    return {"csv": path, "slowdown_10_10": free,
+            "max_slowdown": max(r[3] for r in rows)}
+
+
+def main():
+    res = run()
+    print("fig1_phase_transition ->", res["csv"])
+    for ell, s in res["slowdown_10_10"].items():
+        print(f"  ell={ell:6d}: slowdown(k=10,w=10) = {s:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

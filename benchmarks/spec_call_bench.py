@@ -1,0 +1,69 @@
+"""Model-call microbenchmark (the engine-level analogue of the paper's
+CUDA-event timings): CPU wall time per call for decode (1,1) vs verification
+(k, w+1), plus the drafter cost — demonstrating 'negligible-cost' drafting
+(P1/P2): the drafter must be orders of magnitude cheaper than a model call.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.drafters import mixed_draft
+from repro.models import model as M
+
+from .common import ensure_dirs, get_tables, get_trained
+
+
+def _time(fn, *args, n=20):
+    out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run(max_len: int = 256) -> dict:
+    ensure_dirs()
+    cfg, params = get_trained()
+    tables = get_tables(cfg, params)
+    B, P = 4, 64
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, P), 0,
+                              cfg.vocab_size)
+    state = M.init_state(cfg, B, max_len)
+    _, state = jax.jit(lambda s, t: M.prefill(params, cfg, s, tokens=t)
+                       )(state, toks)
+    rows = []
+
+    dec = jax.jit(lambda s, t: M.decode(params, cfg, s, t))
+    us_dec = _time(lambda: dec(state, toks[:, :1]))
+    rows.append(("call_decode_1x1", us_dec, "baseline"))
+
+    for (k, w) in [(5, 4), (10, 10), (25, 14)]:
+        vt = jax.random.randint(jax.random.PRNGKey(1), (B, k, w + 1), 0,
+                                cfg.vocab_size)
+        ver = jax.jit(lambda s, r: M.verify(params, cfg, s, r))
+        us_v = _time(lambda: ver(state, vt))
+        rows.append((f"call_verify_k{k}_w{w}", us_v,
+                     f"slowdown_vs_decode={us_v/us_dec:.2f}x"))
+
+    buf = jnp.zeros((B, max_len), jnp.int32
+                    ).at[:, :P].set(toks)
+    cur = jnp.full((B,), P, jnp.int32)
+    drafter = jax.jit(lambda b, c, l: mixed_draft(tables, b, c, l, 1, 10, 10))
+    us_d = _time(lambda: drafter(buf, cur, toks[:, -1]))
+    rows.append(("drafter_mixed_k10_w10", us_d,
+                 f"fraction_of_decode_call={us_d/us_dec:.3f}"))
+    return {"rows": rows}
+
+
+def main():
+    for name, us, derived in run()["rows"]:
+        print(f"{name:24s} {us:10.0f} us   {derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's method in ~40 lines of public API.
+
+Trains a tiny byte-level LM, builds learning-free N-gram tables from its OWN
+weights (P1: no draft training, P2: no external data), then generates with
+batched speculation — output is bit-identical to greedy, in fewer calls.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.ngram_tables import NGramTables, build_bigram, build_unigram
+from repro.core.spec_engine import SpecConfig, generate
+from repro.data.pipeline import mixed_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+# 1. a tiny model, trained for a few steps on synthetic code/math/chat
+cfg = ModelConfig(name="quickstart", num_layers=2, d_model=128, num_heads=4,
+                  num_kv_heads=2, d_ff=256, vocab_size=259,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32)
+ts = init_train_state(jax.random.PRNGKey(0), cfg)
+step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, total_steps=100,
+                                                warmup_steps=10)))
+for batch in mixed_batches(8, 128, 100):
+    ts, metrics = step(ts, jnp.asarray(batch))
+print(f"trained: loss={float(metrics['loss']):.3f}")
+params = ts["params"]
+
+# 2. learning-free tables from the model itself (one-off sweep)
+fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+bigram_topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=10, w_max=10)
+unigram = build_unigram(params["embed"]["embedding"],
+                        params["embed"]["lm_head"], k_max=10)
+tables = NGramTables(unigram, bigram_topk, chain)
+
+# 3. batched speculation vs greedy — same output, fewer model calls
+tok = ByteTokenizer()
+prompt = jnp.asarray(tok.encode_batch(["def add_numbers(a, b):\n"], 24))
+for strategy in ("greedy", "mixed"):
+    spec = SpecConfig(k=10, w=10, strategy=strategy, max_new_tokens=64)
+    buf, blen, stats = generate(params, cfg, spec, prompt, tables)
+    text = tok.decode(buf[0, 24:int(blen[0])])
+    tpc = float(stats["tokens"][0]) / max(int(stats["calls"][0]), 1)
+    print(f"\n--- {strategy}: {int(stats['calls'][0])} calls, "
+          f"{tpc:.2f} tokens/call ---")
+    print(text)

@@ -1,0 +1,50 @@
+"""Train a ~30M-param model on the synthetic corpus and watch speculation
+quality improve as the model sharpens (tokens/call rises with training).
+
+Run:  PYTHONPATH=src python examples/train_tiny.py [--steps 300]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec_engine import SpecConfig, generate
+from repro.data.pipeline import mixed_batches
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.core.ngram_tables import NGramTables, build_bigram, build_unigram
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+cfg = ModelConfig(name="tiny-30m", num_layers=4, d_model=256, num_heads=8,
+                  num_kv_heads=4, d_ff=1024, vocab_size=259,
+                  param_dtype=jnp.float32, compute_dtype=jnp.float32)
+print(f"params: {cfg.param_count():,}")
+ts = init_train_state(jax.random.PRNGKey(0), cfg)
+step = jax.jit(make_train_step(cfg, AdamWConfig(
+    lr=6e-4, total_steps=args.steps, warmup_steps=args.steps // 10)))
+
+tok = ByteTokenizer()
+prompt = jnp.asarray(tok.encode_batch(["def mul_numbers(a, b):\n"], 24))
+
+def tokens_per_call(params):
+    fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+    topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=10, w_max=10)
+    uni = build_unigram(params["embed"]["embedding"],
+                        params["embed"]["lm_head"], k_max=10)
+    tables = NGramTables(uni, topk, chain)
+    spec = SpecConfig(k=10, w=10, strategy="mixed", max_new_tokens=48)
+    _, _, stats = generate(params, cfg, spec, prompt, tables)
+    return float(stats["tokens"][0]) / max(int(stats["calls"][0]), 1)
+
+it = mixed_batches(8, 128, args.steps)
+for i, b in enumerate(it):
+    ts, m = step(ts, jnp.asarray(b))
+    if (i + 1) % max(args.steps // 3, 1) == 0:
+        tpc = tokens_per_call(ts["params"])
+        print(f"step {i+1:4d}: loss={float(m['loss']):.3f} "
+              f"-> tokens/call={tpc:.2f}")

@@ -1,0 +1,29 @@
+"""HuBERT-XLarge: encoder-only transformer backbone (same arch as wav2vec2)
+[arXiv:2106.07447].  The conv/mel frontend is a STUB per the assignment —
+input_specs() feeds precomputed frame embeddings; vocab=504 target units.
+Encoder-only => bidirectional attention, no decode shapes (DESIGN.md §5)."""
+import jax.numpy as jnp
+from ..models.config import BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", arch_type="audio", source="arXiv:2106.07447",
+        num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+        d_ff=5120, vocab_size=504,
+        block_pattern=(BlockSpec("attn", "gelu"),),
+        norm="layernorm", rope="none", causal=False,
+        encoder_only=True, embedding_inputs=True,
+    ).validate()
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-smoke", arch_type="audio", source="arXiv:2106.07447",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=64,
+        block_pattern=(BlockSpec("attn", "gelu"),),
+        norm="layernorm", rope="none", causal=False,
+        encoder_only=True, embedding_inputs=True,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    ).validate()

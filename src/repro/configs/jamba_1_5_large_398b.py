@@ -1,0 +1,36 @@
+"""Jamba-1.5-Large (398B): Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887].  Period-8 pattern: attention at offset 4, MoE on odd
+layers; no explicit positional encoding (Jamba uses none)."""
+import jax.numpy as jnp
+from ..models.config import BlockSpec, ModelConfig
+
+_PATTERN = tuple(
+    BlockSpec("attn" if p == 4 else "mamba",
+              "moe" if p % 2 == 1 else "swiglu")
+    for p in range(8))
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b", arch_type="hybrid",
+        source="arXiv:2403.19887",
+        num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=24576, vocab_size=65536,
+        block_pattern=_PATTERN,
+        num_experts=16, num_experts_per_tok=2,
+        mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+        norm="rmsnorm", rope="none",
+    ).validate()
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-smoke", arch_type="hybrid", source="arXiv:2403.19887",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab_size=512,
+        block_pattern=(BlockSpec("mamba", "moe"), BlockSpec("attn", "swiglu")),
+        num_experts=4, num_experts_per_tok=2,
+        mamba_d_state=8, mamba_d_conv=4, mamba_expand=2,
+        norm="rmsnorm", rope="none",
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    ).validate()

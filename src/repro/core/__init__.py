@@ -1,0 +1,4 @@
+"""The paper's primary contribution: learning-free batched speculation."""
+from . import drafters, ngram_tables, phase, spec_engine, verify  # noqa: F401
+from .ngram_tables import NGramTables, build_bigram, build_unigram  # noqa: F401
+from .spec_engine import SpecConfig, generate  # noqa: F401

@@ -1,0 +1,84 @@
+"""Adaptive (k, w) controller — beyond-paper extension.
+
+The paper sweeps a static (k, w) grid offline and notes (§5.2) that smarter
+strategy allocation "could yield further gains".  This controller picks the
+strategy ONLINE, per served batch, from a small set of precompiled arms:
+
+    score(arm) = EMA_tokens_per_call(arm) / roofline_slowdown(arm | ell)
+
+i.e. measured acceptance divided by the modeled call-time inflation
+(core/phase.py), with a UCB exploration bonus.  Arms are a fixed list so the
+jitted engine never recompiles outside the precompiled set (a TPU serving
+requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from ..models.config import ModelConfig
+from .phase import slowdown
+
+
+@dataclasses.dataclass
+class ArmStats:
+    tokens: float = 0.0
+    calls: float = 0.0
+    pulls: int = 0
+
+    @property
+    def tpc(self) -> float:
+        return self.tokens / self.calls if self.calls else 1.0
+
+
+DEFAULT_ARMS: Tuple[Tuple[int, int], ...] = ((1, 0), (5, 4), (10, 4),
+                                             (10, 10), (25, 2))
+
+
+class AdaptiveKW:
+    def __init__(self, cfg: ModelConfig,
+                 arms: Tuple[Tuple[int, int], ...] = DEFAULT_ARMS,
+                 ell: int = 512, ema: float = 0.9,
+                 explore: float = 0.3):
+        self.cfg = cfg
+        self.arms: List[Tuple[int, int]] = list(arms)
+        self.ell = ell
+        self.ema = ema
+        self.explore = explore
+        self.stats: Dict[Tuple[int, int], ArmStats] = {
+            a: ArmStats() for a in self.arms}
+        # modeled call slowdown per arm (the roofline prior)
+        self.slow: Dict[Tuple[int, int], float] = {
+            (k, w): slowdown(cfg, ell, k, w) if (k, w) != (1, 0) else 1.0
+            for (k, w) in self.arms}
+        self.total_pulls = 0
+
+    def score(self, arm: Tuple[int, int]) -> float:
+        s = self.stats[arm]
+        # optimistic prior before any pull: assume half the draft accepted
+        tpc = s.tpc if s.pulls else 1.0 + arm[1] * 0.5
+        bonus = self.explore * math.sqrt(
+            math.log(self.total_pulls + 1) / (s.pulls + 1e-9)) \
+            if s.pulls else float("inf")
+        return tpc / self.slow[arm] + bonus
+
+    def choose(self) -> Tuple[int, int]:
+        return max(self.arms, key=self.score)
+
+    def update(self, arm: Tuple[int, int], tokens: float,
+               calls: float) -> None:
+        s = self.stats[arm]
+        if s.pulls:
+            s.tokens = self.ema * s.tokens + (1 - self.ema) * tokens
+            s.calls = self.ema * s.calls + (1 - self.ema) * calls
+        else:
+            s.tokens, s.calls = tokens, calls
+        s.pulls += 1
+        self.total_pulls += 1
+
+    def best_exploit(self) -> Tuple[int, int]:
+        """Current best arm ignoring exploration bonus."""
+        return max(self.arms,
+                   key=lambda a: (self.stats[a].tpc if self.stats[a].pulls
+                                  else 0.0) / self.slow[a])

@@ -1,0 +1,169 @@
+"""Draft strategies (paper §4): model-derived and context-derived N-grams.
+
+Every drafter maps the current decode state to a fixed-shape batch of k
+drafts of w tokens:  drafts (B, k, w) int32, valid (B, k) bool.  Invalid rows
+are still verified (fixed shapes) but can never win more than the bonus
+token, so correctness is unaffected — this is the fixed-shape TPU adaptation
+of the paper's variable-length Python drafting.
+
+The context N-gram uses a sort/hash reformulation of the paper's
+``torch.unfold`` + ``torch.unique`` code (Appendix B.2), which is
+jit-compatible: occurrence counts via sorted-hash range queries, recency
+tie-break via a (count, position) lexicographic score, dedup by keeping the
+latest occurrence of each continuation.  Hash collisions are possible but
+*harmless*: a collision only merges the counts of two different
+continuations; verification rejects any wrong token (output equals greedy
+decoding bit-for-bit regardless).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ngram_tables import NGramTables
+
+_HASH_MULT = jnp.uint32(2654435761)   # Knuth multiplicative hash
+_HASH_MIX = jnp.uint32(0x9E3779B9)
+
+
+# ----------------------------------------------------------------------------
+# model-derived drafters
+# ----------------------------------------------------------------------------
+def unigram_draft(tables: NGramTables, batch: int, k: int, w: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k unigram tokens, extended with bigram argmax chains (w > 1)."""
+    first = tables.unigram_topk[:k]                       # (k,)
+    drafts = _extend(tables, first[None].repeat(batch, 0), w)
+    return drafts, jnp.ones((batch, k), bool)
+
+
+def bigram_draft(tables: NGramTables, last_token: jnp.ndarray, k: int, w: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Extended model bigram (paper §4.1 'Extensions').
+
+    last_token: (B,). Drafts row i = [topk_i(p(.|x)), argmax-chain...].
+    """
+    first = tables.bigram_topk[last_token][:, :k]         # (B, k)
+    drafts = _extend(tables, first, w)
+    return drafts, jnp.ones((first.shape[0], k), bool)
+
+
+def _extend(tables: NGramTables, first: jnp.ndarray, w: int) -> jnp.ndarray:
+    """first: (B, k) -> (B, k, w) via the precomputed argmax chain."""
+    if w == 1:
+        return first[..., None]
+    tail = tables.bigram_chain[first][..., :w - 1]        # (B, k, w-1)
+    return jnp.concatenate([first[..., None], tail], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# context-derived drafter
+# ----------------------------------------------------------------------------
+def _gram_matrix(buf: jnp.ndarray, width: int) -> jnp.ndarray:
+    """buf: (L,) -> all windows (L - width + 1, width) (static shapes)."""
+    L = buf.shape[0]
+    return jnp.stack([buf[j:L - width + 1 + j] for j in range(width)], axis=-1)
+
+
+def _hash_rows(rows: jnp.ndarray) -> jnp.ndarray:
+    """Polynomial uint32 hash over the last axis."""
+    h = jnp.zeros(rows.shape[:-1], jnp.uint32)
+    for j in range(rows.shape[-1]):
+        h = (h ^ (rows[..., j].astype(jnp.uint32) * _HASH_MULT)) * _HASH_MIX + 1
+    return h
+
+
+def _context_draft_row(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
+                       k: int, w: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single sequence. buf: (L,) int32; cur_len: () int32.
+
+    Returns (drafts (k, w), valid (k,)).
+    """
+    L = buf.shape[0]
+    width = q + w
+    grams = _gram_matrix(buf, width)                      # (N, width), N=L-width+1
+    N = grams.shape[0]
+    query = jax.lax.dynamic_slice(buf, (jnp.maximum(cur_len - q, 0),), (q,))
+    match = jnp.all(grams[:, :q] == query[None, :], axis=-1)
+    idx = jnp.arange(N)
+    match = match & (idx + width <= cur_len) & (cur_len >= q + 1)
+    conts = grams[:, q:]                                  # (N, w)
+    h = _hash_rows(conts)
+    SENTINEL = jnp.uint32(0xFFFFFFFF)
+    hm = jnp.where(match, h, SENTINEL)
+    hs = jnp.sort(hm)
+    lo = jnp.searchsorted(hs, hm, side="left")
+    hi = jnp.searchsorted(hs, hm, side="right")
+    counts = (hi - lo)                                    # occurrences
+    # dedup: keep only the LATEST matching position of each continuation
+    # (recency also breaks count ties, per the paper)
+    later_same = jnp.zeros((N,), bool)
+    # position j is dominated if any j' > j has same hash and matches
+    # computed via a reverse cummax over (match ? idx : -1) per hash bucket —
+    # equivalently: j is representative iff idx == max idx among its bucket.
+    max_idx_sorted = jnp.where(match, idx, -1)
+    # scatter-max over hash buckets using sort by hash
+    order = jnp.argsort(hm)
+    h_sorted = hm[order]
+    i_sorted = max_idx_sorted[order]
+    # running max within equal-hash runs (left to right)
+    def scan_fn(carry, x):
+        prev_h, prev_m = carry
+        hh, ii = x
+        m = jnp.where(hh == prev_h, jnp.maximum(prev_m, ii), ii)
+        return (hh, m), m
+    _, run_max = jax.lax.scan(scan_fn, (SENTINEL ^ 1, jnp.int32(-1)),
+                              (h_sorted, i_sorted), reverse=False)
+    # propagate run max backwards (max of run is at run end): reverse scan
+    def scan_back(carry, x):
+        prev_h, prev_m = carry
+        hh, mm = x
+        m = jnp.where(hh == prev_h, jnp.maximum(prev_m, mm), mm)
+        return (hh, m), m
+    _, bucket_max_sorted = jax.lax.scan(scan_back, (SENTINEL ^ 1, jnp.int32(-1)),
+                                        (h_sorted, run_max), reverse=True)
+    bucket_max = jnp.zeros((N,), jnp.int32).at[order].set(bucket_max_sorted)
+    is_rep = match & (idx == bucket_max)
+    # top-k by (count, recency), overflow-free: lexsort ascending by
+    # (idx, count) with invalid rows pushed to the front, take the last k.
+    cnt_key = jnp.where(is_rep, counts.astype(jnp.int32), -1)
+    order2 = jnp.lexsort((idx, cnt_key))                  # ascending
+    top_idx = order2[-k:][::-1]
+    drafts = conts[top_idx]                               # (k, w)
+    valid = cnt_key[top_idx] >= 0
+    return drafts.astype(jnp.int32), valid
+
+
+def context_ngram_draft(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
+                        k: int, w: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """buf: (B, L); cur_len: (B,). Returns (drafts (B,k,w), valid (B,k))."""
+    return jax.vmap(lambda b, c: _context_draft_row(b, c, q, k, w))(buf,
+                                                                    cur_len)
+
+
+# ----------------------------------------------------------------------------
+# mixed strategy (paper §4.3)
+# ----------------------------------------------------------------------------
+def mixed_draft(tables: NGramTables, buf: jnp.ndarray, cur_len: jnp.ndarray,
+                last_token: jnp.ndarray, q: int, k: int, w: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Context N-gram matches first, extended model bigram fills the rest.
+
+    Returns (drafts (B,k,w), valid (B,k), n_context (B,) — allocation stat).
+    """
+    ctx_d, ctx_v = context_ngram_draft(buf, cur_len, q, k, w)
+    big_d, _ = bigram_draft(tables, last_token, k, w)
+    B = buf.shape[0]
+    # compact the valid context drafts to the front, bigram after
+    order = jnp.argsort(~ctx_v, axis=1, stable=True)       # valid first
+    ctx_sorted = jnp.take_along_axis(ctx_d, order[..., None], axis=1)
+    n_ctx = ctx_v.sum(axis=1)                              # (B,)
+    row = jnp.arange(k)[None, :]
+    use_ctx = row < n_ctx[:, None]
+    big_idx = jnp.clip(row - n_ctx[:, None], 0, k - 1)
+    big_fill = jnp.take_along_axis(big_d, big_idx[..., None], axis=1)
+    drafts = jnp.where(use_ctx[..., None], ctx_sorted, big_fill)
+    valid = jnp.ones((B, k), bool)
+    return drafts, valid, n_ctx.astype(jnp.int32)

@@ -1,0 +1,115 @@
+"""Model-derived N-gram tables (paper §4.1).
+
+All three tables are learning-free (P1), use no external data (P2) and are
+one-off costs amortised over the whole serving lifetime:
+
+  - *unigram*:  rank tokens by the distance of their output embedding from
+    the mean output embedding, under the metric induced by the covariance of
+    the input embeddings:  d(x) = ||u_x - ū||_V  with
+    <a, b>_V = aᵀ (VᵀV/|X|) b,  p(x) ∝ exp(-d(x)).
+    (The paper's Appendix B code ranks by the *inner product* mū·u_x instead
+    of the distance; we implement the main-text distance formula and keep the
+    appendix variant selectable for ablation.)
+  - *bigram*:   p_M(·|x) for every x — one batched forward sweep over the
+    vocabulary, stored as a top-k index table (V, k_max).
+  - *extended bigram*:  greedy argmax chains of the bigram, so a draft of any
+    w > 1 is an O(1) lookup (V, w_max).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NGramTables:
+    """Static draft tables, treated as (abstract-shardable) model inputs."""
+    unigram_topk: jnp.ndarray      # (k_max,) int32 — global token ranking
+    bigram_topk: jnp.ndarray       # (V, k_max) int32 — top-k of p_M(.|x)
+    bigram_chain: jnp.ndarray      # (V, w_max) int32 — argmax chains
+
+    @property
+    def k_max(self) -> int:
+        return self.bigram_topk.shape[-1]
+
+    @property
+    def w_max(self) -> int:
+        return self.bigram_chain.shape[-1]
+
+
+def abstract_tables(vocab_size: int, k_max: int = 32,
+                    w_max: int = 16) -> "jax.ShapeDtypeStruct tree":
+    """ShapeDtypeStruct stand-ins for the dry-run (launch/input_specs.py)."""
+    return NGramTables(
+        unigram_topk=jax.ShapeDtypeStruct((k_max,), jnp.int32),
+        bigram_topk=jax.ShapeDtypeStruct((vocab_size, k_max), jnp.int32),
+        bigram_chain=jax.ShapeDtypeStruct((vocab_size, w_max), jnp.int32),
+    )
+
+
+def build_unigram(embedding: jnp.ndarray, lm_head: jnp.ndarray,
+                  k_max: int = 32, appendix_variant: bool = False
+                  ) -> jnp.ndarray:
+    """embedding: (V, d) input embeddings V; lm_head: (d, V) output embeds U.
+
+    Returns the k_max tokens with the smallest d(x) (main-text formula), or
+    the appendix's topk(-(mū·Cov·u_x)) when ``appendix_variant``.
+    """
+    Ve = embedding.astype(jnp.float32)
+    U = lm_head.astype(jnp.float32)            # columns u_x: (d, V)
+    cov = (Ve.T @ Ve) / Ve.shape[0]            # (d, d)
+    mu = U.mean(axis=1, keepdims=True)         # (d, 1)
+    if appendix_variant:
+        dists = (mu.T @ cov @ U).squeeze(0)    # (V,)
+        return jax.lax.top_k(-dists, k_max)[1].astype(jnp.int32)
+    diff = U - mu                              # (d, V)
+    d2 = jnp.einsum("dv,de,ev->v", diff, cov, diff)
+    return jax.lax.top_k(-d2, k_max)[1].astype(jnp.int32)
+
+
+def build_bigram(next_logits_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                 vocab_size: int, k_max: int = 32, w_max: int = 16,
+                 batch: int = 256) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sweep the vocabulary once to obtain p_M(.|x) for every token.
+
+    next_logits_fn: (B, 1) int32 -> (B, V) f32 next-token logits (a jitted
+    single-token model forward; the KV-less call the paper uses).
+    Returns (bigram_topk (V, k_max), bigram_chain (V, w_max)).
+    """
+    n_batches = -(-vocab_size // batch)
+    topks = []
+    for i in range(n_batches):
+        lo = i * batch
+        toks = jnp.clip(jnp.arange(lo, lo + batch), 0, vocab_size - 1)
+        logits = next_logits_fn(toks[:, None])
+        topks.append(jax.lax.top_k(logits, k_max)[1].astype(jnp.int32))
+    topk = jnp.concatenate(topks, axis=0)[:vocab_size]      # (V, k_max)
+    return topk, chain_from_argmax(topk[:, 0], w_max)
+
+
+def chain_from_argmax(argmax_next: jnp.ndarray, w_max: int) -> jnp.ndarray:
+    """argmax_next: (V,) -> chain (V, w_max): chain[x, j] = argmax^(j+1)(x)."""
+    cols = [argmax_next]
+    for _ in range(w_max - 1):
+        cols.append(argmax_next[cols[-1]])
+    return jnp.stack(cols, axis=1).astype(jnp.int32)
+
+
+def tables_from_counts(counts: jnp.ndarray, k_max: int = 32,
+                       w_max: int = 16) -> NGramTables:
+    """Build tables from an empirical bigram count matrix (V, V).
+
+    Used in tests/benchmarks to get *exact* ground-truth tables for tiny
+    vocabularies without a model sweep.
+    """
+    V = counts.shape[0]
+    k_max = min(k_max, V)
+    topk = jax.lax.top_k(counts.astype(jnp.float32), k_max)[1].astype(jnp.int32)
+    uni = jax.lax.top_k(counts.sum(0).astype(jnp.float32),
+                        k_max)[1].astype(jnp.int32)
+    return NGramTables(unigram_topk=uni, bigram_topk=topk,
+                       bigram_chain=chain_from_argmax(topk[:, 0], w_max))

@@ -1,0 +1,108 @@
+"""Analytic memory-bound -> compute-bound phase model (paper §3 / Fig. 1).
+
+The paper measures the slowdown of a (k, w+1) verification call vs a (1, 1)
+decode call on an A100 and observes the phase transition where matmuls cross
+the GPU's ops-to-bytes threshold.  On TPU the analogue is the MXU ops:byte
+ratio.  Since this container is CPU-only, we *derive* the call-time model
+from FLOPs/bytes of each component (weights load, KV read, GEMM compute) and
+TPU v5e hardware constants — each matmul contributes
+max(flops/peak_flops, bytes/hbm_bw) (roofline time), summed over the layer.
+
+This module is also used by the adaptive (k, w) controller (beyond-paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..models.config import ATTN, MOE, ModelConfig, layer_blocks
+
+PEAK_FLOPS = 197e12        # TPU v5e bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+BYTES_PER_EL = 2           # bf16
+
+
+@dataclasses.dataclass
+class CallCost:
+    flops: float
+    hbm_bytes: float
+
+    @property
+    def time(self) -> float:
+        """Roofline execution time (s) on one chip."""
+        return max(self.flops / PEAK_FLOPS, self.hbm_bytes / HBM_BW)
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.flops / PEAK_FLOPS > self.hbm_bytes / HBM_BW
+
+    def __add__(self, o: "CallCost") -> "CallCost":
+        return CallCost(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes)
+
+    def __mul__(self, s: float) -> "CallCost":
+        return CallCost(self.flops * s, self.hbm_bytes * s)
+
+    __rmul__ = __mul__
+
+
+def _gemm(m: int, n: int, kk: int) -> CallCost:
+    """(m,k)x(k,n) matmul: per-matmul roofline term."""
+    return CallCost(2.0 * m * n * kk,
+                    BYTES_PER_EL * (m * kk + kk * n + m * n))
+
+
+def verify_call_cost(cfg: ModelConfig, ell: int, k: int, w: int,
+                     shared_cache: bool = True) -> CallCost:
+    """Cost of one verification model call: batch (k, w+1), context ell.
+
+    ``shared_cache=False`` models the paper's layout (KV replicated k times,
+    re-read per row); ``True`` models our bifurcated layout (read once).
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    t = k * (w + 1)              # total query tokens in the call
+    total = CallCost(0.0, 0.0)
+    for b in layer_blocks(cfg):
+        if b.mixer == ATTN:
+            total += _gemm(t, H * hd, d) + _gemm(t, KV * hd, d) * 2
+            total += _gemm(t, d, H * hd)
+            # attention scores/values vs the cache
+            ctx = min(ell, cfg.sliding_window or ell)
+            cache_reads = 1 if shared_cache else k
+            flops = 2.0 * k * (w + 1) * ctx * H * hd * 2   # qk^T and pv
+            flops += 2.0 * k * (w + 1) * (w + 1) * H * hd * 2
+            kv_bytes = BYTES_PER_EL * cache_reads * ctx * KV * hd * 2
+            total += CallCost(flops, kv_bytes)
+        else:
+            # recurrent mixers: state-sized read/write + projections
+            di = cfg.mamba_d_inner if b.mixer == "mamba" else 2 * d
+            total += _gemm(t, 2 * di, d) + _gemm(t, d, di)
+            total += CallCost(2.0 * t * di * 16,
+                              4 * di * 16 * 2)  # state update (f32)
+        if b.mlp == MOE:
+            e_ff = cfg.expert_d_ff
+            n_act = cfg.num_experts_per_tok + cfg.num_shared_experts
+            # active expert FLOPs; weight bytes for every *touched* expert
+            touched = min(cfg.num_experts, t * cfg.num_experts_per_tok)
+            total += CallCost(2.0 * 3 * t * n_act * d * e_ff,
+                              BYTES_PER_EL * 3 * d * e_ff * touched)
+        elif b.mlp in ("swiglu", "geglu"):
+            total += _gemm(t, cfg.d_ff, d) * 2 + _gemm(t, d, cfg.d_ff)
+        elif b.mlp in ("relu2", "gelu"):
+            total += _gemm(t, cfg.d_ff, d) + _gemm(t, d, cfg.d_ff)
+    total += _gemm(t, cfg.vocab_size, d)   # lm head
+    return total
+
+
+def slowdown(cfg: ModelConfig, ell: int, k: int, w: int,
+             shared_cache: bool = True) -> float:
+    """Fig. 1 quantity: time(k, w+1 | ell) / time(1, 1 | ell)."""
+    base = verify_call_cost(cfg, ell, 1, 0, shared_cache).time
+    return verify_call_cost(cfg, ell, k, w, shared_cache).time / base
+
+
+def expected_speedup(cfg: ModelConfig, ell: int, k: int, w: int,
+                     tokens_per_call: float,
+                     shared_cache: bool = True) -> float:
+    """Modelled wall-time speedup = tokens_per_call / slowdown."""
+    return tokens_per_call / slowdown(cfg, ell, k, w, shared_cache)

@@ -1,0 +1,213 @@
+"""The speculative generation engine: draft -> verify -> accept -> commit.
+
+Unlike the paper's Python decode loop, the whole generation is ONE jitted
+``lax.while_loop`` with fixed shapes (a requirement for TPU serving): the
+token buffer is static-length, per-sequence progress is tracked by
+``cur_len``, and finished rows simply commit 0 tokens.
+
+Invariants:
+  - output is bit-identical to greedy decoding (property-tested);
+  - state.cur_len == #cached positions == buf_len - 1 (the last committed
+    token's KV is materialised by the *next* call, exactly as in the paper's
+    Appendix D cache).
+
+Commit paths:
+  - attention-only archs: write the winner's verified KV tail (no extra
+    model call) — ``commit_kv_tails``;
+  - archs with recurrent mixers (Jamba, xLSTM): gated replay of the winner
+    row (one (B, w+1) forward; ~1/k of the verify cost) — see DESIGN.md §4.
+
+Statistics mirror the paper's ablations (Fig. 4): acceptance-length
+histogram, winning-rank histogram, context/bigram allocation and
+per-strategy accepted tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from .drafters import (bigram_draft, context_ngram_draft, mixed_draft,
+                       unigram_draft)
+from .ngram_tables import NGramTables
+from .verify import accept
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    k: int = 10                 # number of batched drafts
+    w: int = 10                 # speculation depth
+    q: int = 1                  # context-match query length
+    strategy: str = "mixed"     # mixed | bigram | unigram | context | greedy
+    max_new_tokens: int = 64
+    eos_id: int = -1            # -1: never stop on eos
+
+
+def _draft(spec: SpecConfig, tables: NGramTables, buf, buf_len, last):
+    if spec.strategy == "mixed":
+        return mixed_draft(tables, buf, buf_len, last, spec.q, spec.k, spec.w)
+    if spec.strategy == "bigram":
+        d, v = bigram_draft(tables, last, spec.k, spec.w)
+    elif spec.strategy == "unigram":
+        d, v = unigram_draft(tables, buf.shape[0], spec.k, spec.w)
+    elif spec.strategy == "context":
+        d, v = context_ngram_draft(buf, buf_len, spec.q, spec.k, spec.w)
+        d = jnp.where(v[..., None], d, 0)
+    else:
+        raise ValueError(spec.strategy)
+    n_ctx = (v.sum(axis=1) if spec.strategy == "context"
+             else jnp.zeros((buf.shape[0],), jnp.int32))
+    return d, v, n_ctx.astype(jnp.int32)
+
+
+def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "calls": jnp.zeros((B,), jnp.int32),
+        "tokens": jnp.zeros((B,), jnp.int32),
+        "accept_hist": jnp.zeros((B, spec.w + 2), jnp.int32),   # n_commit 0..w+1
+        "rank_hist": jnp.zeros((B, max(spec.k, 1)), jnp.int32),
+        "alloc_ctx": jnp.zeros((B, spec.k + 1), jnp.int32),     # n_ctx per call
+        "accepted_ctx": jnp.zeros((B,), jnp.int32),             # drafted tokens
+        "accepted_bigram": jnp.zeros((B,), jnp.int32),          # accepted per src
+    }
+
+
+def generate(params, cfg: ModelConfig, spec: SpecConfig,
+             prompt: jnp.ndarray, tables: Optional[NGramTables] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Generate up to max_new_tokens for every row of ``prompt`` (B, P).
+
+    Returns (buf (B, L), buf_len (B,), stats).  jit-compatible end to end.
+    """
+    B, P = prompt.shape
+    L = P + spec.max_new_tokens + spec.w + 2
+    max_cache = L
+    state = M.init_state(cfg, B, max_cache)
+    buf = jnp.zeros((B, L), jnp.int32)
+    buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
+
+    logits_p, state = M.prefill(params, cfg, state, tokens=prompt)
+    first = jnp.argmax(logits_p[:, -1], axis=-1).astype(jnp.int32)   # free token
+    buf = buf.at[:, P].set(first)
+    buf_len = jnp.full((B,), P + 1, jnp.int32)
+    stats = _init_stats(spec, B)
+    stats["tokens"] = stats["tokens"] + 1
+    done = (first == spec.eos_id) if spec.eos_id >= 0 else jnp.zeros((B,), bool)
+
+    attn_only = not M.has_recurrent(cfg)
+
+    def cond(carry):
+        _, buf_len_c, done_c, *_ = carry
+        return (~done_c).any() & (buf_len_c - P < spec.max_new_tokens).any()
+
+    def spec_body(carry):
+        buf_c, len_c, done_c, state_c, st = carry
+        last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)[:, 0]
+        drafts, valid, n_ctx = _draft(spec, tables, buf_c, len_c, last)
+        rows = jnp.concatenate(
+            [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
+            axis=-1)                                                # (B,k,w+1)
+        logits, tails = M.verify(params, cfg, state_c, rows)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        acc = accept(drafts, greedy)
+        active = (~done_c) & (len_c - P < spec.max_new_tokens)
+        budget = jnp.maximum(P + spec.max_new_tokens - len_c, 0)
+        n_commit = jnp.where(active, jnp.minimum(acc.n_commit, budget), 0)
+        # eos truncation: commit only up to (and including) the first eos
+        if spec.eos_id >= 0:
+            iseos = acc.tokens == spec.eos_id
+            first_eos = jnp.argmax(iseos, axis=1)
+            has_eos = iseos.any(axis=1) & (first_eos < n_commit)
+            n_commit = jnp.where(has_eos, first_eos + 1, n_commit)
+            done_c = done_c | (has_eos & active)
+        # commit the model state
+        if attn_only:
+            state_n = M.commit_kv_tails(cfg, state_c, tails, acc.winner,
+                                        n_commit)
+        else:
+            row_tok = jnp.take_along_axis(
+                rows, acc.winner[:, None, None], axis=1)[:, 0]      # (B,w+1)
+            _, state_n = M.decode(params, cfg, state_c, row_tok,
+                                  n_commit=n_commit)
+        # write accepted tokens into the buffer
+        pos = jnp.arange(spec.w + 1)[None, :]
+        slots = jnp.clip(len_c[:, None] + pos, 0, L - 1)
+        gate = pos < n_commit[:, None]
+        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], slots.shape)
+        old = buf_c[b_idx, slots]
+        buf_n = buf_c.at[b_idx, slots].set(
+            jnp.where(gate, acc.tokens, old))
+        len_n = len_c + n_commit
+        done_n = done_c | (len_n - P >= spec.max_new_tokens)
+        # ---- stats ----
+        st = dict(st)
+        st["calls"] = st["calls"] + active.astype(jnp.int32)
+        st["tokens"] = st["tokens"] + n_commit
+        st["accept_hist"] = st["accept_hist"].at[
+            jnp.arange(B), jnp.clip(n_commit, 0, spec.w + 1)].add(
+                active.astype(jnp.int32))
+        n_win = jnp.take_along_axis(acc.n_acc, acc.winner[:, None], 1)[:, 0]
+        st["rank_hist"] = st["rank_hist"].at[jnp.arange(B), acc.winner].add(
+            (active & (n_win > 0)).astype(jnp.int32))
+        st["alloc_ctx"] = st["alloc_ctx"].at[
+            jnp.arange(B), jnp.clip(n_ctx, 0, spec.k)].add(
+                active.astype(jnp.int32))
+        from_ctx = acc.winner < n_ctx
+        acc_drafted = jnp.maximum(n_commit - 1, 0)
+        st["accepted_ctx"] = st["accepted_ctx"] + jnp.where(
+            active & from_ctx, acc_drafted, 0)
+        st["accepted_bigram"] = st["accepted_bigram"] + jnp.where(
+            active & ~from_ctx, acc_drafted, 0)
+        return (buf_n, len_n, done_n, state_n, st)
+
+    def greedy_body(carry):
+        buf_c, len_c, done_c, state_c, st = carry
+        last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)
+        logits, state_n = M.decode(params, cfg, state_c, last)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        active = (~done_c) & (len_c - P < spec.max_new_tokens)
+        slots = jnp.clip(len_c, 0, L - 1)
+        buf_n = buf_c.at[jnp.arange(B), slots].set(
+            jnp.where(active, nxt, buf_c[jnp.arange(B), slots]))
+        len_n = len_c + active.astype(jnp.int32)
+        done_n = done_c | (len_n - P >= spec.max_new_tokens)
+        if spec.eos_id >= 0:
+            done_n = done_n | (nxt == spec.eos_id)
+        st = dict(st)
+        st["calls"] = st["calls"] + active.astype(jnp.int32)
+        st["tokens"] = st["tokens"] + active.astype(jnp.int32)
+        return (buf_n, len_n, done_n, state_n, st)
+
+    body = greedy_body if spec.strategy == "greedy" else spec_body
+    carry = (buf, buf_len, done, state, stats)
+    buf, buf_len, done, state, stats = jax.lax.while_loop(cond, body, carry)
+    return buf, buf_len, stats
+
+
+def greedy_reference(params, cfg: ModelConfig, prompt: jnp.ndarray,
+                     max_new_tokens: int) -> jnp.ndarray:
+    """Plain greedy decoding via full forward() only — the test oracle.
+
+    Uses a FIXED-shape buffer (causality guarantees the garbage tail can't
+    influence the position being read), so the whole loop compiles once.
+    """
+    B, P = prompt.shape
+    L = P + max_new_tokens
+    buf = jnp.zeros((B, L), jnp.int32)
+    buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
+
+    @jax.jit
+    def step(buf, cur):
+        logits, _ = M.forward(params, cfg, tokens=buf)
+        nxt = jnp.take_along_axis(
+            jnp.argmax(logits, axis=-1).astype(jnp.int32),
+            (cur - 1)[None].repeat(B, 0)[:, None], axis=1)[:, 0]
+        return buf.at[:, cur].set(nxt)
+
+    for i in range(max_new_tokens):
+        buf = step(buf, jnp.asarray(P + i))
+    return buf

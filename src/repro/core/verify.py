@@ -1,0 +1,49 @@
+"""Greedy acceptance logic for batched speculation (paper §4.1).
+
+The verification model call already produced, for every draft row i, the
+model's greedy next-token prediction after each of its w+1 input tokens
+(``greedy[b, i, j]`` = argmax after consuming input j of row i, where input
+0 is the last committed token and inputs 1..w are the draft).
+
+Row i accepts n_i = length of the longest prefix of its draft matching the
+model's own greedy predictions; the winner is the row with the largest n_i
+(ties -> lowest row index, which under the mixed strategy prioritises the
+context N-gram, matching the paper's ordering).  The winner always also
+emits one *bonus* token (the model's prediction after its last accepted
+token), so every call commits n* + 1 >= 1 tokens and the output equals plain
+greedy decoding token-for-token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Acceptance(NamedTuple):
+    tokens: jnp.ndarray    # (B, w+1) committed tokens (padded past n_commit)
+    n_commit: jnp.ndarray  # (B,) = n* + 1
+    winner: jnp.ndarray    # (B,) winning row index
+    n_acc: jnp.ndarray     # (B, k) per-row accepted-draft lengths (stats)
+
+
+def accept(drafts: jnp.ndarray, greedy: jnp.ndarray) -> Acceptance:
+    """drafts: (B, k, w) int32; greedy: (B, k, w+1) int32 argmax predictions."""
+    B, k, w = drafts.shape
+    eq = drafts == greedy[..., :w]
+    n_acc = jnp.cumprod(eq.astype(jnp.int32), axis=-1).sum(axis=-1)  # (B,k)
+    winner = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)            # (B,)
+    n_win = jnp.take_along_axis(n_acc, winner[:, None], axis=1)[:, 0]
+    d_win = jnp.take_along_axis(drafts, winner[:, None, None],
+                                axis=1)[:, 0]                         # (B,w)
+    g_win = jnp.take_along_axis(greedy, winner[:, None, None],
+                                axis=1)[:, 0]                         # (B,w+1)
+    pos = jnp.arange(w + 1)[None, :]
+    bonus = jnp.take_along_axis(g_win, n_win[:, None], axis=1)        # (B,1)
+    d_pad = jnp.concatenate([d_win, jnp.zeros((B, 1), d_win.dtype)], axis=1)
+    tokens = jnp.where(pos < n_win[:, None], d_pad,
+                       jnp.where(pos == n_win[:, None], bonus, 0))
+    return Acceptance(tokens=tokens.astype(jnp.int32),
+                      n_commit=(n_win + 1).astype(jnp.int32),
+                      winner=winner, n_acc=n_acc)

@@ -1,0 +1,2 @@
+from . import datasets, pipeline, tokenizer  # noqa: F401
+from .tokenizer import ByteTokenizer  # noqa: F401

@@ -1,0 +1,77 @@
+"""Activation-sharding constraints (Megatron-SP style), installable hook.
+
+Model code is mesh-agnostic; the launcher installs a sharder before lowering
+and the transformer calls ``constrain(x, kind)`` at the few points GSPMD
+propagation needs help:
+
+  - "residual": the (B, T, d) stream carried between blocks (and the remat
+    checkpoint!): batch over ("pod","data"), sequence over "model"
+    (sequence-parallelism — the all-gather to full T happens inside each
+    block's first matmul, its reduce-scatter at the block output; XLA inserts
+    these automatically from the constraint).
+  - "logits": (B, Tc, V) loss chunks: vocab over "model".
+
+Without this, Nemotron-340B train activations lower replicated over the
+model axis: 864 GiB/device temp (measured) vs ~56 GiB/device after
+(EXPERIMENTS.md §Perf it-1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import resolve_axis
+
+_MESH: Optional[Mesh] = None
+
+
+def install(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def installed() -> bool:
+    return _MESH is not None
+
+
+def constrain(x, kind: str):
+    if _MESH is None:
+        return x
+    mesh = _MESH
+    if kind == "residual" and x.ndim == 3:
+        B, T, _ = x.shape
+        spec = P(resolve_axis(mesh, "embed", B),
+                 resolve_axis(mesh, "heads", T), None)
+    elif kind == "logits" and x.ndim == 3:
+        B, T, V = x.shape
+        spec = P(resolve_axis(mesh, "embed", B), None,
+                 resolve_axis(mesh, "vocab", V))
+    elif kind == "ctx_logits" and x.ndim == 6:
+        # decode/verify context logits (B, K, n_kv, G, w1, S): keep them in
+        # the CACHE's sharding (kv heads over "model" when divisible, else
+        # cache sequence over "model") so the big KV cache is never
+        # all-gathered — the tiny q block is re-sharded instead, and the
+        # softmax/value contraction pay only small partial-reduce
+        # collectives (flash-decode sequence parallelism, §Perf it-7).
+        B, K, n_kv, G, w1, S = x.shape
+        n_ax = resolve_axis(mesh, "kv", n_kv)
+        s_ax = None
+        if n_ax is None and S % mesh.shape.get("model", 1) == 0:
+            s_ax = "model"
+        spec = P(resolve_axis(mesh, "embed", B), None, n_ax, None, None,
+                 s_ax)
+    elif kind == "ctx_out" and x.ndim == 6:
+        # (B, K, w1, n_kv, G, hd) value-contraction output: batch-only so
+        # the s-sharded contraction resolves as partial-sum + small
+        # all-reduce instead of all-gathering the V cache.
+        spec = P(resolve_axis(mesh, "embed", x.shape[0]), None, None, None,
+                 None, None)
+    elif kind == "hidden_ffn" and x.ndim >= 2:
+        spec = P(*([resolve_axis(mesh, "embed", x.shape[0])]
+                   + [None] * (x.ndim - 2)
+                   + [resolve_axis(mesh, "ffn", x.shape[-1])]))
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

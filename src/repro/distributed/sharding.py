@@ -1,0 +1,220 @@
+"""Logical-axis sharding rules with divisibility fallbacks.
+
+Scheme (DESIGN.md §6): 2D ("data", "model") per pod, + leading "pod" axis
+multi-pod.
+  - "embed"-like param dims  -> FSDP over ("pod","data")  (what lets
+    Nemotron-340B / Jamba-398B fit v5e HBM),
+  - "heads"/"ffn"/"kv"/"vocab"/"expert" dims -> tensor/expert parallel over
+    "model",
+  - activation batch         -> ("pod", "data"),
+  - KV-cache: kv-heads over "model" when divisible, else head_dim;
+    batch over ("pod","data") when divisible, else cache sequence over
+    "data" (the batch=1 long-context case).
+
+Every rule degrades to replication when the dim isn't divisible by the mesh
+axis — a sharding that fails to lower is a bug, a replicated small tensor is
+not.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes, in fallback order
+_LOGICAL = {
+    "embed": (("pod", "data"), ("data",)),
+    "heads": (("model",),),
+    "kv": (("model",),),
+    "ffn": (("model",),),
+    "vocab": (("model",),),
+    "expert": (("model",),),
+    None: (),
+}
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64))
+
+
+def resolve_axis(mesh: Mesh, logical: Optional[str], dim: int):
+    """Pick the first fallback whose size divides ``dim`` (else None)."""
+    if logical is None:
+        return None
+    for axes in _LOGICAL[logical]:
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            continue
+        if dim % _axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def spec_for(mesh: Mesh, logicals: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> P:
+    assert len(logicals) == len(shape), (logicals, shape)
+    return P(*[resolve_axis(mesh, lg, d) for lg, d in zip(logicals, shape)])
+
+
+# ----------------------------------------------------------------------------
+# parameter rules, keyed by (parent, leaf-name)
+# ----------------------------------------------------------------------------
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings
+    "embedding": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+    # attention
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv"),
+    "wv": ("embed", "kv"),
+    "wo": ("heads", "embed"),
+    # dense mlps (and shared experts)
+    "w_gate": ("embed", "ffn"),
+    "w_up": ("embed", "ffn"),
+    "w_down": ("ffn", "embed"),
+    "shared_gate": ("embed", "ffn"),
+    "shared_up": ("embed", "ffn"),
+    "shared_down": ("ffn", "embed"),
+    # moe (3D expert weights override the 2D mlp rules by rank below)
+    "router": ("embed", None),
+    # mamba
+    "in_proj": ("embed", "ffn"),
+    "conv_w": (None, "ffn"),
+    "conv_b": ("ffn",),
+    "x_proj": ("ffn", None),
+    "dt_proj": (None, "ffn"),
+    "dt_bias": ("ffn",),
+    "A_log": ("ffn", None),
+    "D": ("ffn",),
+    "out_proj": ("ffn", "embed"),
+    # mlstm
+    "up_proj": ("embed", "ffn"),
+    "w_if": (None, None),
+    "b_i": (None,),
+    "b_f": (None,),
+    "gn_scale": (None,),
+    "skip": (None,),
+    "down_proj": ("ffn", "embed"),
+    # slstm
+    "w_in": ("embed", "ffn"),
+    "r": (None, None, None, None),
+    "b": (None,),
+    "ffn_gate": ("embed", "ffn"),
+    "ffn_up": ("embed", "ffn"),
+    "ffn_down": ("ffn", "embed"),
+}
+
+_MOE_3D_RULES = {
+    "w_gate": (("expert", "embed", None), (None, "embed", "ffn")),
+    "w_up": (("expert", "embed", None), (None, "embed", "ffn")),
+    "w_down": (("expert", None, "embed"), (None, "ffn", "embed")),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspec(mesh: Mesh, path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    shape = tuple(leaf.shape)
+    # body/prefix groups are stacked over periods: leading None
+    stacked = any(n.startswith("p") and n[1:].isdigit()
+                  or n.startswith("pre") for n in names)
+    core_shape = shape[1:] if stacked else shape
+    if name in _MOE_3D_RULES and len(core_shape) == 3:
+        for rule in _MOE_3D_RULES[name]:
+            spec = [resolve_axis(mesh, lg, d)
+                    for lg, d in zip(rule, core_shape)]
+            if spec[0] is not None or rule[0] is None:
+                break
+        # fall through to the last rule if expert dim never divided
+    elif name in _PARAM_RULES and len(_PARAM_RULES[name]) == len(core_shape):
+        rule = _PARAM_RULES[name]
+        spec = [resolve_axis(mesh, lg, d) for lg, d in zip(rule, core_shape)]
+    else:
+        spec = [None] * len(core_shape)
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def params_shardings(mesh: Mesh, params_shapes) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(mesh, path, leaf)),
+        params_shapes)
+
+
+# ----------------------------------------------------------------------------
+# decode-state rules
+# ----------------------------------------------------------------------------
+def _batch_axes(mesh: Mesh, b: int):
+    return resolve_axis(mesh, "embed", b)   # ("pod","data") fallback chain
+
+
+def state_pspec(mesh: Mesh, path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    shape = tuple(leaf.shape)
+    if name == "cur_len":
+        return P(None)
+    R, B = shape[0], shape[1]
+    batch = _batch_axes(mesh, B)
+    if name in ("k", "v"):                      # (R, B, S, KV, hd)
+        _, _, S, KV, hd = shape
+        kv_ax = resolve_axis(mesh, "kv", KV)
+        seq_ax = None
+        if kv_ax is None and S % mesh.shape.get("model", 1) == 0:
+            # kv heads don't divide the model axis (kv=8/2/1 GQA): shard the
+            # cache SEQUENCE over "model" instead — attention contracts hd
+            # (replicated) and softmaxes over the sharded seq with small
+            # partial-reduce collectives.  Sharding hd instead forces an
+            # all-reduce of full (.., S) logits per layer (§Perf it-5).
+            seq_ax = "model"
+        if batch is None and seq_ax is None:
+            # batch=1 long-context: shard the cache sequence over "data"
+            seq_ax = "data" if S % mesh.shape.get("data", 1) == 0 else None
+        return P(None, batch, seq_ax, kv_ax, None)
+    if name == "conv":                          # (R, B, dc-1, di)
+        return P(None, batch, None, resolve_axis(mesh, "ffn", shape[-1]))
+    if name == "ssm":                           # (R, B, di, ds)
+        return P(None, batch, resolve_axis(mesh, "ffn", shape[2]), None)
+    if name == "C":                             # (R, B, nh, dh, dh)
+        nh_ax = resolve_axis(mesh, "heads", shape[2])
+        dh_ax = resolve_axis(mesh, "heads", shape[3]) if nh_ax is None \
+            else None
+        return P(None, batch, nh_ax, dh_ax, None)
+    if name in ("n", "h", "c", "m"):            # (R,B,nh[,dh])
+        nh_ax = resolve_axis(mesh, "heads", shape[2])
+        rest = [None] * (len(shape) - 3)
+        if nh_ax is None and len(shape) > 3:
+            rest[0] = resolve_axis(mesh, "heads", shape[3])
+        return P(None, batch, nh_ax, *rest)
+    return P(*([None] * len(shape)))
+
+
+def state_shardings(mesh: Mesh, state_shapes) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, state_pspec(mesh, path, leaf)),
+        state_shapes)
+
+
+def batch_sharding(mesh: Mesh, shape: Tuple[int, ...],
+                   batch_dim: int = 0) -> NamedSharding:
+    """Tokens / embeds / logits: batch over ("pod","data"), rest replicated.
+
+    Exception: (3, B, T) M-RoPE positions -> batch_dim=1.
+    """
+    spec = [None] * len(shape)
+    spec[batch_dim] = _batch_axes(mesh, shape[batch_dim])
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated in
+interpret mode on CPU; see tests/test_kernels_*)."""
+from . import ngram_match, ops, ref, spec_attention  # noqa: F401

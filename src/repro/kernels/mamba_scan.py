@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: chunked Mamba selective scan (Jamba's SSM hot spot).
+
+TPU adaptation of the paper-adjacent CUDA 'hardware-aware scan': the
+(d_inner, d_state) recurrent state lives in VMEM scratch across sequence
+chunks (the sequential grid axis), inputs stream chunk-by-chunk from HBM,
+and the intra-chunk recurrence is a parallel ``associative_scan`` on the
+VPU.  The state is never materialised for the full sequence in HBM — the
+property that makes 32k-token Jamba prefill feasible.
+
+Grid: (batch, d_inner/BD, T/C) with the chunk axis iterated sequentially.
+VMEM per step: C*BD*DS*4 bytes for the scan intermediates (default
+128*512*16*4 = 4 MiB) + the carried state BD*DS.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+DEFAULT_BLOCK_D = 512
+
+
+def _kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+            y_ref, hT_ref, h_scr):
+    t = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)          # (C, BD)
+    dt = dt_ref[0].astype(jnp.float32)        # (C, BD)
+    A = A_ref[...].astype(jnp.float32)        # (BD, DS)
+    Bm = B_ref[0].astype(jnp.float32)         # (C, DS)
+    Cm = C_ref[0].astype(jnp.float32)         # (C, DS)
+
+    dA = jnp.exp(dt[..., None] * A[None])     # (C, BD, DS)
+    dBx = (dt * u)[..., None] * Bm[:, None, :]
+
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    cumA, hs = jax.lax.associative_scan(comb, (dA, dBx), axis=0)
+    hs = hs + cumA * h_scr[...][None]
+    y = jnp.einsum("cds,cs->cd", hs, Cm,
+                   preferred_element_type=jnp.float32)
+    y = y + u * D_ref[...].astype(jnp.float32)[None, :]
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scr[...] = hs[-1]
+
+    @pl.when(t == n_t - 1)
+    def _final():
+        hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def mamba_scan_call(u, dt, A, B, C, D, h0, *, chunk: int = DEFAULT_CHUNK,
+                    block_d: int = DEFAULT_BLOCK_D,
+                    interpret: bool = False):
+    """u/dt: (Bt, T, di) ; A: (di, ds) ; B/C: (Bt, T, ds) ; D: (di,) ;
+    h0: (Bt, di, ds) f32.  Returns (y (Bt,T,di) f32, hT (Bt,di,ds) f32).
+
+    T % chunk == 0 and di % block_d == 0 (ops.py pads/clamps).
+    """
+    Bt, T, di = u.shape
+    ds = A.shape[1]
+    assert T % chunk == 0 and di % block_d == 0, (T, chunk, di, block_d)
+    grid = (Bt, di // block_d, T // chunk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((block_d, ds), lambda b, d, t: (d, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((block_d,), lambda b, d, t: (d,)),
+            pl.BlockSpec((1, block_d, ds), lambda b, d, t: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_d, ds), lambda b, d, t: (b, d, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((Bt, T, di), jnp.float32),
+                   jax.ShapeDtypeStruct((Bt, di, ds), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, B, C, D, h0)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: context N-gram matching (paper §4.2, Appendix B.2).
+
+The O(L·(q+w)) part of the context drafter — comparing the last q tokens
+against every context position and hashing every w-token continuation — is
+a perfect VPU job: the token buffer is tiny (500k tokens = 2 MB int32, far
+under VMEM), so the whole buffer is kept resident in VMEM while the grid
+walks output blocks of positions.  The (count, recency) scoring and top-k
+stay in plain XLA (sort-based; O(L log L) but bandwidth-trivial).
+
+Outputs per position i:
+  match[i] = all(buf[i:i+q] == query) and i + q + w <= cur_len
+  hash[i]  = polynomial uint32 hash of buf[i+q : i+q+w]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_L = 1024
+_HASH_MULT = 2654435761
+_HASH_MIX = 0x9E3779B9
+
+
+def _kernel(cur_len_ref, buf_ref, query_ref, match_ref, hash_ref, *,
+            q: int, w: int, block_l: int):
+    i = pl.program_id(0)
+    base = i * block_l
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (block_l,), 0)
+
+    match = jnp.ones((block_l,), jnp.bool_)
+    for j in range(q):
+        tok = pl.load(buf_ref, (pl.ds(base + j, block_l),))
+        match = match & (tok == query_ref[j])
+    # windows that would run past the committed context are invalid
+    # (cur_len <= true L, so this also masks the padded region)
+    match = match & (pos + q + w <= cur_len_ref[0])
+
+    h = jnp.zeros((block_l,), jnp.uint32)
+    for j in range(w):
+        tok = pl.load(buf_ref, (pl.ds(base + q + j, block_l),)
+                      ).astype(jnp.uint32)
+        h = (h ^ (tok * jnp.uint32(_HASH_MULT))) * jnp.uint32(_HASH_MIX) + 1
+    match_ref[...] = match.astype(jnp.int32)
+    hash_ref[...] = h
+
+
+def ngram_match_call(buf: jnp.ndarray, query: jnp.ndarray,
+                     cur_len: jnp.ndarray, *, w: int,
+                     block_l: int = DEFAULT_BLOCK_L,
+                     interpret: bool = False):
+    """buf: (L + q + w,) int32, PADDED by the ops wrapper so every window
+    load is in bounds (single sequence; vmap over batch in ops.py).
+    query: (q,) int32; cur_len: (1,) int32.
+    Returns (match (L,) int32, hash (L,) uint32) for the first L positions.
+    """
+    q = query.shape[0]
+    L = buf.shape[0] - q - w
+    assert L % block_l == 0, (L, block_l)
+    kernel = functools.partial(_kernel, q=q, w=w, block_l=block_l)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L // block_l,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),   # whole buf in VMEM
+                pl.BlockSpec(memory_space=pltpu.ANY),   # query
+            ],
+            out_specs=[
+                pl.BlockSpec((block_l,), lambda i, c: (i,)),
+                pl.BlockSpec((block_l,), lambda i, c: (i,)),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((L,), jnp.int32),
+                   jax.ShapeDtypeStruct((L,), jnp.uint32)],
+        interpret=interpret,
+    )(cur_len, buf, query)

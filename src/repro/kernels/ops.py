@@ -1,0 +1,108 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle layout/padding (TPU alignment: hd and cache blocks to multiples
+of 128, query rows to multiples of 8), dispatch between kernel and reference
+paths, and batching.  On this CPU container the kernels run with
+``interpret=True``; on a real TPU set ``interpret=False`` (the default picks
+by backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ngram_match import DEFAULT_BLOCK_L, ngram_match_call
+from .spec_attention import DEFAULT_BLOCK_S, spec_attention_call
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), size
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w1", "block_s", "interpret"))
+def spec_attention_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
+                      w1: int, block_s: int = DEFAULT_BLOCK_S,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Engine-facing layout: q (B,K,W1,H,hd); caches (B,S,KV,hd);
+    tails (B,K,W1,KV,hd); cur_len (B,).  Returns (B,K,W1,H,hd)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, K, W1, H, hd = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    qk = q.transpose(0, 3, 1, 2, 4).reshape(B, H, K * W1, hd)
+    kc = k_cache.transpose(0, 2, 1, 3)           # (B,KV,S,hd)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    kt = k_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    vt = v_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    bs = min(block_s, S) if S % min(block_s, S) == 0 else S
+    kc, S0 = _pad_to(kc, 2, bs)
+    vc, _ = _pad_to(vc, 2, bs)
+    # padded cache slots have slot >= S0 >= cur_len -> masked by cur_len test
+    out = spec_attention_call(qk, kc, vc, kt, vt, cur_len.astype(jnp.int32),
+                              w1=W1, block_s=bs, interpret=interpret)
+    return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
+
+
+def spec_attention_ref_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
+                          w1: int) -> jnp.ndarray:
+    """Oracle with the same engine-facing layout."""
+    B, K, W1, H, hd = q.shape
+    KV = k_cache.shape[2]
+    qk = q.transpose(0, 3, 1, 2, 4).reshape(B, H, K * W1, hd)
+    kc = k_cache.transpose(0, 2, 1, 3)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    kt = k_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    vt = v_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    out = ref.spec_attention_ref(qk, kc, vc, kt, vt,
+                                 cur_len.astype(jnp.int32), w1=W1)
+    return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "block_l", "interpret"))
+def ngram_match_op(buf, query, cur_len, *, w: int,
+                   block_l: int = DEFAULT_BLOCK_L,
+                   interpret: bool | None = None):
+    """buf: (B, L) int32; query: (B, q); cur_len: (B,).
+
+    Returns (match (B, L) int32, hash (B, L) uint32)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, L = buf.shape
+    q = query.shape[1]
+    bl = min(block_l, L) if L % min(block_l, L) == 0 else L
+    pad = jnp.full((B, q + w), -1, jnp.int32)
+    bufp = jnp.concatenate([buf.astype(jnp.int32), pad], axis=1)
+    fn = lambda b, qq, c: ngram_match_call(b, qq, c[None], w=w, block_l=bl,
+                                           interpret=interpret)
+    return jax.vmap(fn)(bufp, query.astype(jnp.int32),
+                        cur_len.astype(jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan_op(u, dt, A, B, C, D, h0, *, chunk: int = 128,
+                  block_d: int = 512, interpret: bool | None = None):
+    """Padded/clamped wrapper for the chunked selective-scan kernel."""
+    from .mamba_scan import mamba_scan_call
+    if interpret is None:
+        interpret = _default_interpret()
+    Bt, T, di = u.shape
+    c = min(chunk, T) if T % min(chunk, T) == 0 else T
+    bd = min(block_d, di) if di % min(block_d, di) == 0 else di
+    return mamba_scan_call(u, dt, A, B, C, D, h0, chunk=c, block_d=bd,
+                           interpret=interpret)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: bifurcated speculative-verification attention.
+
+This is the compute hot-spot of the paper's method: every decode step calls
+the model on a (k, w+1) block whose attention reads an ell-long KV cache.
+The paper's PyTorch layout replicates the cache k times (`torch.expand`);
+on TPU we instead stream the SHARED cache once per (batch, head) from HBM
+through VMEM (flash-decoding style online softmax over cache blocks) and
+handle the per-row speculative tail with an in-register causal mask — the
+k× HBM traffic disappears (DESIGN.md §3).
+
+Layout/tiling:
+  grid = (B, H, S/BS) — the last axis iterates sequentially on TPU, so the
+  online-softmax accumulators live in VMEM scratch across cache blocks.
+  q is laid out (B, H, K*W1, hd): K*W1 query rows per (batch, head); the MXU
+  sees (K*W1, hd) x (hd, BS) matmuls — hd and BS should be multiples of 128
+  (the ops.py wrapper pads).  cur_len is a scalar-prefetch operand so block
+  masking is known before the DMA of each block.
+
+The speculative tail (K*W1 keys) is processed in the LAST grid step with a
+row-block-diagonal causal mask: query row i = (draft r_i, offset t_i) may
+attend tail key j = (r_j, t_j) iff r_i == r_j and t_j <= t_i — drafts never
+see each other, exactly the paper's batched independence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _kernel(cur_len_ref, q_ref, k_ref, v_ref, kt_ref, vt_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, w1: int, scale: float, block_s: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (KW1, hd)
+    kb = k_ref[0, 0].astype(jnp.float32)                 # (BS, hd)
+    logits = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+    slot = s * block_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = slot < cur_len_ref[b]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_cur = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    vb = v_ref[0, 0].astype(jnp.float32)                 # (BS, hd)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc
+
+    @pl.when(s == n_s - 1)
+    def _tail_and_write():
+        kt = kt_ref[0, 0].astype(jnp.float32)            # (KW1, hd)
+        vt = vt_ref[0, 0].astype(jnp.float32)
+        lt = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        kw1 = lt.shape[0]
+        qi = jax.lax.broadcasted_iota(jnp.int32, (kw1, kw1), 0)
+        kj = jax.lax.broadcasted_iota(jnp.int32, (kw1, kw1), 1)
+        same_row = (qi // w1) == (kj // w1)
+        causal = (kj % w1) <= (qi % w1)
+        lt = jnp.where(same_row & causal, lt, NEG_INF)
+
+        m_p, l_p, a_p = m_scr[...], l_scr[...], acc_scr[...]
+        m_c = jnp.max(lt, axis=-1)
+        m_f = jnp.maximum(m_p, m_c)
+        p_t = jnp.exp(lt - m_f[:, None])
+        alpha_f = jnp.exp(m_p - m_f)
+        l_f = l_p * alpha_f + p_t.sum(axis=-1)
+        a_f = a_p * alpha_f[:, None] + jax.lax.dot_general(
+            p_t, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0, 0] = (a_f / l_f[:, None]).astype(o_ref.dtype)
+
+
+def spec_attention_call(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
+                        w1: int, block_s: int = DEFAULT_BLOCK_S,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, KW1, hd) — KW1 = k*(w+1) rows, k-major.
+    k_cache/v_cache: (B, KV, S, hd) (linear cache, slot == position).
+    k_tail/v_tail:   (B, KV, KW1, hd) per-row speculative KV.
+    cur_len: (B,) int32.  Returns (B, H, KW1, hd), dtype of q.
+
+    S must be a multiple of block_s (ops.py pads).
+    """
+    B, H, KW1, hd = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    assert S % block_s == 0, (S, block_s)
+    assert KW1 % w1 == 0
+    grid = (B, H, S // block_s)
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, w1=w1, scale=scale, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, KW1, hd), lambda b, h, s, c: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_s, hd),
+                             lambda b, h, s, c: (b, h // G, s, 0)),
+                pl.BlockSpec((1, 1, block_s, hd),
+                             lambda b, h, s, c: (b, h // G, s, 0)),
+                pl.BlockSpec((1, 1, KW1, hd),
+                             lambda b, h, s, c: (b, h // G, 0, 0)),
+                pl.BlockSpec((1, 1, KW1, hd),
+                             lambda b, h, s, c: (b, h // G, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, KW1, hd),
+                                   lambda b, h, s, c: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((KW1,), jnp.float32),
+                pltpu.VMEM((KW1,), jnp.float32),
+                pltpu.VMEM((KW1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, KW1, hd), q.dtype),
+        interpret=interpret,
+    )(cur_len, q, k_cache, v_cache, k_tail, v_tail)

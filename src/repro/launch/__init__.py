@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, dry-run, train/serve entry points.
+
+NOTE: launch/dryrun.py must be executed as a MODULE ENTRY POINT
+(``python -m repro.launch.dryrun``): it sets XLA_FLAGS before importing jax.
+Importing this package does NOT touch device state.
+"""

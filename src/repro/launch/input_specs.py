@@ -1,0 +1,166 @@
+"""ShapeDtypeStruct stand-ins + step functions for the dry-run matrix.
+
+For each (architecture, input-shape) pair this module builds:
+  - the step function the production launcher would pjit
+      train_4k    -> train_step          (decoders: token batch;
+                                          audio/vlm: frontend-stub embeds)
+      prefill_32k -> prefill_step        (last-position logits only)
+      decode_32k  -> serve_step          (1 new token, 32k KV cache) and
+                     spec_serve_step     (the paper: (k, w+1) verification)
+      long_500k   -> serve_step at 524k  (SSM native / sliding-window ring)
+  - abstract inputs (jax.ShapeDtypeStruct — no allocation ever happens)
+  - in/out shardings from distributed/sharding.py
+
+Skips (DESIGN.md §5): encoder-only archs have no decode; long_500k uses the
++swa ring-cache variant for full-attention dense archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, long_context_variant
+from ..distributed import sharding as shd
+from ..models import model as M
+from ..models.config import MROPE, ModelConfig
+from ..train import AdamWConfig, make_train_step
+from ..train.optimizer import init_opt_state
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# the paper's representative default (k, w) = (10, 10)
+SPEC_K, SPEC_W = 10, 10
+
+
+class DryrunCase(NamedTuple):
+    name: str
+    fn: Callable                 # positional-arg function to jit
+    args: Tuple[Any, ...]        # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    skip_reason: Optional[str] = None
+    donate: Tuple[int, ...] = ()   # argnums donated (train state, KV caches)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _abstract(fn, *args, **kwargs):
+    return jax.eval_shape(functools.partial(fn, **kwargs), *args)
+
+
+def params_abstract(cfg: ModelConfig):
+    rng = _sds((2,), jnp.uint32)
+    return _abstract(lambda r: M.init_params(r, cfg), rng)
+
+
+def state_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    return _abstract(lambda: M.init_state(cfg, batch, max_len))
+
+
+def _shardings_like(mesh, tree, rule):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, rule(mesh, p, l)), tree)
+
+
+def resolve_case(arch: str, shape: str, mesh: Mesh,
+                 spec_step: bool = False,
+                 num_layers: Optional[int] = None) -> DryrunCase:
+    """Build the (possibly skipped) dry-run case for one (arch, shape).
+
+    ``num_layers`` overrides depth (roofline calibration compiles reduced
+    1-period / 2-period variants with scans unrolled; see dryrun.py).
+    """
+    info = SHAPES[shape]
+    cfg = get_config(arch)
+    name = f"{arch}|{shape}" + ("|spec" if spec_step else "")
+
+    if cfg.encoder_only and info["kind"] == "decode":
+        return DryrunCase(name, None, (), (), None,
+                          skip_reason="encoder-only: no decode step "
+                                      "(DESIGN.md §5)")
+    if shape == "long_500k":
+        cfg = long_context_variant(cfg)
+    if num_layers is not None:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers).validate()
+
+    B, T = info["batch"], info["seq"]
+    p_abs = params_abstract(cfg)
+    p_shd = shd.params_shardings(mesh, p_abs)
+    repl = shd.replicated(mesh)
+
+    if info["kind"] == "train":
+        opt_cfg = AdamWConfig(total_steps=1000)
+        step = make_train_step(cfg, opt_cfg, remat=True)
+        ts_abs = {"params": p_abs,
+                  "opt": _abstract(lambda: init_opt_state(p_abs))}
+        ts_shd = {"params": p_shd,
+                  "opt": {"m": p_shd, "v": p_shd, "step": repl}}
+        if cfg.embedding_inputs:
+            emb = _sds((B, T, cfg.d_model), jnp.bfloat16)
+            tgt = _sds((B, T), jnp.int32)
+            batch_abs = (emb, tgt)
+            batch_shd = (shd.batch_sharding(mesh, emb.shape),
+                         shd.batch_sharding(mesh, tgt.shape))
+        else:
+            batch_abs = _sds((B, T + 1), jnp.int32)
+            batch_shd = shd.batch_sharding(mesh, batch_abs.shape)
+        return DryrunCase(name, step, (ts_abs, batch_abs),
+                          (ts_shd, batch_shd), (ts_shd, repl), donate=(0,))
+
+    if info["kind"] == "prefill":
+        st_abs = state_abstract(cfg, B, T)
+        st_shd = shd.state_shardings(mesh, st_abs)
+
+        if cfg.embedding_inputs:
+            def fn(params, state, embeds):
+                return M.prefill(params, cfg, state, embeds=embeds,
+                                 last_only=True)
+            x_abs = _sds((B, T, cfg.d_model), jnp.bfloat16)
+        else:
+            def fn(params, state, tokens):
+                return M.prefill(params, cfg, state, tokens=tokens,
+                                 last_only=True)
+            x_abs = _sds((B, T), jnp.int32)
+        x_shd = shd.batch_sharding(mesh, x_abs.shape)
+        return DryrunCase(name, fn, (p_abs, st_abs, x_abs),
+                          (p_shd, st_shd, x_shd), (repl, st_shd),
+                          donate=(1,))
+
+    # decode kinds ---------------------------------------------------------
+    st_abs = state_abstract(cfg, B, T)
+    st_shd = shd.state_shardings(mesh, st_abs)
+    if not spec_step:
+        def fn(params, state, tokens):
+            logits, st = M.decode(params, cfg, state, tokens)
+            # serve semantics: the step emits the next token, not the full
+            # (B, vocab) logits — keeps the vocab-sharded lm head local
+            # (argmax = local argmax + tiny cross-shard reduce, §Perf it-8)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), st
+        t_abs = _sds((B, 1), jnp.int32)
+        t_shd = shd.batch_sharding(mesh, t_abs.shape)
+        return DryrunCase(name, fn, (p_abs, st_abs, t_abs),
+                          (p_shd, st_shd, t_shd), (repl, st_shd),
+                          donate=(1,))
+
+    # the paper's speculative verification step (k, w+1)
+    def fn(params, state, rows):
+        logits, tails = M.verify(params, cfg, state, rows)
+        # greedy acceptance happens on-device in the engine; for lowering we
+        # return the argmax (the big tensors stay sharded)
+        return jnp.argmax(logits, axis=-1), tails
+    r_abs = _sds((B, SPEC_K, SPEC_W + 1), jnp.int32)
+    r_shd = shd.batch_sharding(mesh, r_abs.shape)
+    return DryrunCase(name, fn, (p_abs, st_abs, r_abs),
+                      (p_shd, st_shd, r_shd), None)

@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains reduced (smoke) configs on the synthetic
+corpus; on a real cluster the same entry point pjits the identical
+train_step over make_production_mesh() (the dry-run proves those shardings
+compile for every assigned arch — see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.data.pipeline import mixed_batches
+from repro.train import AdamWConfig, init_train_state, make_train_step
+from repro.train.checkpoint import save
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, default="mistral-7b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (CPU container default)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--save", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.embedding_inputs:
+        raise SystemExit(f"{args.arch}: embedding-input arch; use the "
+                         "frontend-stub training path in tests/benchmarks")
+    print(f"arch={cfg.name} params={cfg.param_count():,}")
+    ts = init_train_state(jax.random.PRNGKey(0), cfg)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 10, 1))
+    step = jax.jit(make_train_step(cfg, opt, remat=False))
+    t0 = time.time()
+    for i, b in enumerate(mixed_batches(args.batch, args.seq, args.steps)):
+        ts, m = step(ts, jnp.asarray(b))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"ppl={float(m['ppl']):.1f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.save:
+        save(args.save, ts["params"])
+        print("saved ->", args.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import attention, cache, config, layers, mamba, model, moe, transformer, xlstm  # noqa: F401
+from .config import BlockSpec, ModelConfig  # noqa: F401

@@ -1,0 +1,292 @@
+"""Attention: MHA / GQA / MQA with RoPE variants, sliding windows, caches.
+
+Covers every assigned attention flavour:
+  - full-causal (StableLM, GLM4, Nemotron, Jamba attn layers, ...)
+  - bidirectional (HuBERT encoder)
+  - sliding-window causal (Mixtral; long-context dense variant)
+  - partial-rotary RoPE (StableLM 25%, Nemotron 50%)
+  - M-RoPE (Qwen2-VL, 3D t/h/w positions)
+  - MQA (Gemma kv=1) and GQA groups
+
+The decode/verify path attends to a cache buffer + the in-flight block, which
+is exactly the shape the paper's batched (k, w+1) verification needs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MROPE, ROPE, ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_attention(rng, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.num_heads * hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads * hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads * hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, d), cfg.param_dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+def _rope_inv_freq(cfg: ModelConfig) -> jnp.ndarray:
+    rd = cfg.rotary_dim
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def rope_freqs(cfg: ModelConfig, positions: jnp.ndarray) -> jnp.ndarray:
+    """positions: (B, T) int32, or (3, B, T) for M-RoPE. Returns (B, T, rd/2)."""
+    inv = _rope_inv_freq(cfg)  # (rd/2,)
+    if cfg.rope == MROPE:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, T) positions"
+        sec = jnp.asarray(cfg.mrope_sections)
+        # section id for each rotary half-dim
+        sec_id = jnp.repeat(jnp.arange(3), sec, total_repeat_length=inv.shape[0])
+        # per-dim positions: select the t/h/w position row
+        pos = positions.astype(jnp.float32)  # (3, B, T)
+        pos_per_dim = pos[sec_id]            # (rd/2, B, T)
+        return jnp.moveaxis(pos_per_dim, 0, -1) * inv  # (B, T, rd/2)
+    pos = positions.astype(jnp.float32)
+    return pos[..., None] * inv  # (B, T, rd/2)
+
+
+def apply_rope(x: jnp.ndarray, freqs: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, T, N, hd); freqs: (B, T, rd/2). NeoX half-split convention."""
+    rd = cfg.rotary_dim
+    if rd == 0:
+        return x
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    half = rd // 2
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    cos = jnp.cos(freqs)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(freqs)[:, :, None, :].astype(x.dtype)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1, r2, x_pass], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# core attention math (pure-jnp reference path; Pallas kernel is the TPU path)
+# ----------------------------------------------------------------------------
+# Above this many keys, full self-attention switches to the blockwise
+# (flash-style, online-softmax) path: the (B,H,T,S) logits tensor of a 32k
+# prefill is ~50 GiB/device even sharded — measured in EXPERIMENTS.md §Perf
+# it-3 — while blockwise keeps only one (B,H,T,BS) slab live at a time.
+BLOCKWISE_THRESHOLD = 8192
+BLOCKWISE_BLOCK = 1024
+
+
+def _blockwise_attention(q, k, v, q_pos, k_pos, cfg, causal: bool,
+                         block: int = BLOCKWISE_BLOCK) -> jnp.ndarray:
+    """Flash-style attention: scan over key blocks with online softmax.
+
+    Same contract as ``masked_attention``; numerically identical softmax.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    nb = S // block
+    assert S % block == 0
+    qf = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+    scale = 1.0 / (hd ** 0.5)
+
+    def rs(a):  # (B,S,...) -> (nb, B, bs, ...)
+        return jnp.moveaxis(a.reshape(B, nb, block, *a.shape[2:]), 1, 0)
+
+    kb, vb, kpb = rs(k.astype(jnp.float32)), rs(v.astype(jnp.float32)), \
+        rs(k_pos)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, kp_c = xs
+        logits = jnp.einsum("btkgh,bskh->bkgts", qf, k_c) * scale
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        valid = (kp_c >= 0)[:, None, None, None, :]
+        if causal:
+            valid = valid & (kp_c[:, None, :] <=
+                             q_pos[:, :, None])[:, None, None]
+        if cfg.sliding_window is not None:
+            win = cfg.sliding_window
+            valid = valid & (kp_c[:, None, :] >
+                             q_pos[:, :, None] - win)[:, None, None]
+        logits = jnp.where(valid, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", p, v_c)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, T), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, T), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, T, hd), jnp.float32)
+    from .runtime_flags import UNROLL_FOR_ANALYSIS
+    if UNROLL_FOR_ANALYSIS:
+        carry = (m0, l0, a0)
+        for i in range(nb):
+            carry, _ = body(carry, (kb[i], vb[i], kpb[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, -2, 1).reshape(B, T, H, hd).astype(q.dtype)
+
+
+def masked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                     cfg: ModelConfig, causal: bool) -> jnp.ndarray:
+    """q: (B,T,H,hd) k/v: (B,S,KV,hd); *_pos: (B,T)/(B,S) (-1 = invalid key).
+
+    Returns (B, T, H, hd).  GQA via reshape to (KV, G) groups.
+    Dispatches to the blockwise path for large key counts.
+    """
+    S = k.shape[1]
+    if S >= BLOCKWISE_THRESHOLD and S % BLOCKWISE_BLOCK == 0:
+        return _blockwise_attention(q, k, v, q_pos, k_pos, cfg, causal)
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qf, kf) / (hd ** 0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    valid = (k_pos >= 0)[:, None, None, None, :]
+    if causal:
+        valid = valid & (k_pos[:, None, :] <= q_pos[:, :, None])[:, None, None]
+    if cfg.sliding_window is not None:
+        win = cfg.sliding_window
+        valid = valid & (k_pos[:, None, :] > q_pos[:, :, None] - win)[:, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# layer application
+# ----------------------------------------------------------------------------
+def qkv_project(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                freqs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    x = x.astype(cd)
+    q = (x @ params["wq"].astype(cd)).reshape(B, T, cfg.num_heads, hd)
+    k = (x @ params["wk"].astype(cd)).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (x @ params["wv"].astype(cd)).reshape(B, T, cfg.num_kv_heads, hd)
+    if cfg.rope != "none":
+        q = apply_rope(q, freqs, cfg)
+        k = apply_rope(k, freqs, cfg)
+    return q, k, v
+
+
+def attn_full(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+              positions: jnp.ndarray,
+              seq_mask: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray,
+                                                               Tuple[jnp.ndarray,
+                                                                     jnp.ndarray]]:
+    """Self-attention over a full block (train / prefill).
+
+    positions: (B, T) (or (3,B,T) for mrope). seq_mask: (B, T) bool for padding.
+    Returns output and the (k, v) tensors for cache insertion.
+    """
+    freqs = rope_freqs(cfg, positions) if cfg.rope != "none" else None
+    q, k, v = qkv_project(params, x, cfg, freqs)
+    pos2d = positions[0] if positions.ndim == 3 else positions
+    k_pos = pos2d if seq_mask is None else jnp.where(seq_mask, pos2d, -1)
+    out = masked_attention(q, k, v, pos2d, k_pos, cfg, causal=cfg.causal)
+    B, T, _, _ = out.shape
+    y = out.reshape(B, T, -1) @ params["wo"].astype(cfg.compute_dtype)
+    return y, (k, v)
+
+
+def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                cache_pos: jnp.ndarray,
+                use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                   jnp.ndarray]:
+    """Bifurcated batched-speculation attention (the paper's verification).
+
+    x: (B, k, w1, d) — k speculative rows per sequence.  Each row attends to
+    the SHARED context cache (read once, not k times — beyond-paper
+    optimisation, see DESIGN.md §3) plus its own (w1)-token tail, causally,
+    with no cross-row attention.
+
+    positions: (B, w1) or (3, B, w1) — identical for all k rows.
+    Returns (y (B,k,w1,d), k_new, v_new (B,k,w1,KV,hd)).
+    """
+    B, K, W1, d = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    freqs = rope_freqs(cfg, positions) if cfg.rope != "none" else None
+    xf = x.reshape(B * K, W1, d).astype(cd)
+    fr = None
+    if freqs is not None:
+        fr = jnp.repeat(freqs, K, axis=0)  # (B*K, w1, rd/2)
+    q = (xf @ params["wq"].astype(cd)).reshape(B * K, W1, cfg.num_heads, hd)
+    k_new = (xf @ params["wk"].astype(cd)).reshape(B * K, W1,
+                                                   cfg.num_kv_heads, hd)
+    v_new = (xf @ params["wv"].astype(cd)).reshape(B * K, W1,
+                                                   cfg.num_kv_heads, hd)
+    if cfg.rope != "none":
+        q = apply_rope(q, fr, cfg)
+        k_new = apply_rope(k_new, fr, cfg)
+    KV = cfg.num_kv_heads
+    G = cfg.num_heads // KV
+    qg = q.reshape(B, K, W1, KV, G, hd).astype(jnp.float32)
+    kn = k_new.reshape(B, K, W1, KV, hd).astype(jnp.float32)
+    vn = v_new.reshape(B, K, W1, KV, hd).astype(jnp.float32)
+    kc = k_cache.astype(jnp.float32)
+    vc = v_cache.astype(jnp.float32)
+    scale = 1.0 / (hd ** 0.5)
+    pos2d = positions[0] if positions.ndim == 3 else positions  # (B, w1)
+    # context logits: shared cache read once per sequence
+    lc = jnp.einsum("bkwnGh,bsnh->bknGws", qg, kc) * scale
+    from ..distributed import act_sharding
+    lc = act_sharding.constrain(lc, "ctx_logits")   # (B,K,n,G,w1,S)
+    if cfg.attn_logit_softcap:
+        lc = cfg.attn_logit_softcap * jnp.tanh(lc / cfg.attn_logit_softcap)
+    valid_c = (cache_pos >= 0)[:, None, None, None, None, :]
+    if cfg.sliding_window is not None:
+        win = cfg.sliding_window
+        in_win = (cache_pos[:, None, :] > pos2d[:, :, None] - win)
+        valid_c = valid_c & in_win[:, None, None, None]
+    lc = jnp.where(valid_c, lc, -1e30)
+    # local (per-row) logits: causal within the speculative tail
+    ll = jnp.einsum("bkwnGh,bkvnh->bknGwv", qg, kn) * scale
+    if cfg.attn_logit_softcap:
+        ll = cfg.attn_logit_softcap * jnp.tanh(ll / cfg.attn_logit_softcap)
+    causal = jnp.tril(jnp.ones((W1, W1), bool))
+    ll = jnp.where(causal[None, None, None, None], ll, -1e30)
+    # merged softmax WITHOUT concatenating [lc | ll]: a concat would force
+    # the sharded context logits to be gathered; here only per-row max/sum
+    # scalars cross the cache's sharding (flash-decode style, §Perf it-7).
+    m = jnp.maximum(lc.max(axis=-1), ll.max(axis=-1))     # (b,k,n,G,w)
+    e_c = jnp.exp(lc - m[..., None])
+    e_l = jnp.exp(ll - m[..., None])
+    denom = e_c.sum(axis=-1) + e_l.sum(axis=-1)
+    out = (jnp.einsum("bknGws,bsnh->bkwnGh", e_c, vc)
+           + jnp.einsum("bknGwv,bkvnh->bkwnGh", e_l, vn))
+    out = act_sharding.constrain(out, "ctx_out")
+    out = out / jnp.moveaxis(denom, -1, 2)[..., None]
+    out = out.reshape(B, K, W1, cfg.num_heads * hd).astype(cd)
+    y = out @ params["wo"].astype(cd)
+    return y, kn.astype(cd).reshape(B, K, W1, KV, hd), \
+        vn.astype(cd).reshape(B, K, W1, KV, hd)
+
+

@@ -1,0 +1,193 @@
+"""Decode-state management: KV caches (linear + sliding-window ring), SSM and
+xLSTM recurrent states, and the speculative *commit* semantics.
+
+Paper mapping (Appendix D): the paper keeps a batched (k-row) static KV cache,
+initialised from a k=1 cache by broadcasting, and after each verification
+overwrites all rows with the winning row's accepted entries.  Our TPU-native
+default is the *bifurcated* variant instead: ONE shared cache of the context,
+per-row KV only for the in-flight (w+1)-token speculative tail; commit writes
+the winner's accepted tail into the shared cache.  This removes the k× HBM
+traffic (and k× memory) of the paper's layout — see DESIGN.md §3 and
+EXPERIMENTS.md §Perf where both layouts are measured.
+
+State layout (everything stacked over the R periods of the layer pattern so
+the transformer can ``lax.scan`` over it):
+
+  state = {
+    "cur_len": (B,) int32   — #positions committed per sequence,
+    "groups": {gid: {...}}  — gid = "pre{i}" or "p{j}"; every leaf has
+                               leading dim R (R=1 for prefix groups).
+  }
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ATTN, MAMBA, MLSTM, SLSTM, BlockSpec, ModelConfig
+
+
+def cache_buffer_len(cfg: ModelConfig, max_len: int) -> int:
+    """Physical KV buffer length: window-sized ring when sliding-window."""
+    if cfg.sliding_window is not None and cfg.sliding_window < max_len:
+        return cfg.sliding_window
+    return max_len
+
+
+def group_ids(cfg: ModelConfig):
+    """Yield (gid, BlockSpec, R) for prefix and body pattern positions."""
+    out = []
+    for i, b in enumerate(cfg.prefix_blocks):
+        out.append((f"pre{i}", b, 1))
+    for j, b in enumerate(cfg.block_pattern):
+        out.append((f"p{j}", b, cfg.num_periods))
+    return out
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Allocate an empty decode state for ``batch`` sequences."""
+    S = cache_buffer_len(cfg, max_len)
+    hd = cfg.resolved_head_dim
+    groups = {}
+    for gid, spec, R in group_ids(cfg):
+        if spec.mixer == ATTN:
+            shape = (R, batch, S, cfg.num_kv_heads, hd)
+            groups[gid] = {"k": jnp.zeros(shape, cfg.compute_dtype),
+                           "v": jnp.zeros(shape, cfg.compute_dtype)}
+        elif spec.mixer == MAMBA:
+            groups[gid] = {
+                "conv": jnp.zeros((R, batch, cfg.mamba_d_conv - 1,
+                                   cfg.mamba_d_inner), cfg.compute_dtype),
+                "ssm": jnp.zeros((R, batch, cfg.mamba_d_inner,
+                                  cfg.mamba_d_state), jnp.float32)}
+        elif spec.mixer == MLSTM:
+            di = int(cfg.d_model * cfg.xlstm_mlstm_proj_factor)
+            nh = cfg.num_heads
+            dh = di // nh
+            groups[gid] = {
+                "C": jnp.zeros((R, batch, nh, dh, dh), jnp.float32),
+                "n": jnp.zeros((R, batch, nh, dh), jnp.float32),
+                "m": jnp.full((R, batch, nh), -1e9, jnp.float32),
+                "conv": jnp.zeros((R, batch, cfg.xlstm_conv_kernel - 1, di),
+                                  cfg.compute_dtype)}
+        elif spec.mixer == SLSTM:
+            nh = cfg.num_heads
+            dh = cfg.d_model // nh
+            z = jnp.zeros((R, batch, nh, dh), jnp.float32)
+            groups[gid] = {"c": z, "n": z, "h": z,
+                           "m": jnp.full((R, batch, nh, dh), -1e9, jnp.float32)}
+    return {"cur_len": jnp.zeros((batch,), jnp.int32), "groups": groups}
+
+
+# ----------------------------------------------------------------------------
+# position bookkeeping
+# ----------------------------------------------------------------------------
+def key_positions(cfg: ModelConfig, S: int, cur_len: jnp.ndarray) -> jnp.ndarray:
+    """Absolute position stored in each cache slot; -1 where empty.
+
+    cur_len: (B,). Linear cache: slot s holds position s if s < cur_len.
+    Ring cache (window W=S): slot s holds the largest p < cur_len with
+    p % W == s, valid if p >= 0 and p >= cur_len - W.
+    """
+    B = cur_len.shape[0]
+    slots = jnp.arange(S)[None, :]                      # (1, S)
+    cl = cur_len[:, None]                               # (B, 1)
+    if cfg.sliding_window is not None and cfg.sliding_window <= S:
+        # ring semantics
+        p = cl - 1 - jnp.mod(cl - 1 - slots, S)
+        valid = (p >= 0) & (p >= cl - S) & (cl > 0)
+        return jnp.where(valid, p, -1).astype(jnp.int32)
+    pos = jnp.broadcast_to(slots, (B, S))
+    return jnp.where(pos < cl, pos, -1).astype(jnp.int32)
+
+
+def write_slots(cfg: ModelConfig, S: int, cur_len: jnp.ndarray,
+                T_new: int) -> jnp.ndarray:
+    """Cache slots for the next T_new positions. (B, T_new) int32."""
+    pos = cur_len[:, None] + jnp.arange(T_new)[None, :]
+    if cfg.sliding_window is not None and cfg.sliding_window <= S:
+        return jnp.mod(pos, S).astype(jnp.int32)
+    return pos.astype(jnp.int32)
+
+
+def kv_write(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+             k_new: jnp.ndarray, v_new: jnp.ndarray,
+             slots: jnp.ndarray,
+             gate: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray,
+                                                          jnp.ndarray]:
+    """Write new KV into slots. caches: (B,S,KV,hd); new: (B,T,KV,hd);
+    slots: (B,T). ``gate``: (B,T) bool — write only where True (spec commit).
+
+    T == 1 (the production serve step) uses a one-hot masked select instead
+    of a scatter: elementwise ops partition cleanly when the cache sequence
+    dim is sharded over the `model` axis, whereas a scatter with dynamic
+    per-row indices makes GSPMD all-gather the whole cache every layer
+    (EXPERIMENTS §Perf it-6).  Multi-token writes (speculative verify
+    commits) keep the scatter path.
+    """
+    B, T = slots.shape
+    S = k_cache.shape[1]
+    if T == 1:
+        hit = (jnp.arange(S)[None, :] == slots)            # (B, S)
+        if gate is not None:
+            hit = hit & gate
+        m = hit[..., None, None]
+        k_cache = jnp.where(m, k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(m, v_new.astype(v_cache.dtype), v_cache)
+        return k_cache, v_cache
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T))
+    if gate is not None:
+        old_k = k_cache[b_idx, slots]
+        old_v = v_cache[b_idx, slots]
+        k_new = jnp.where(gate[..., None, None], k_new.astype(k_cache.dtype),
+                          old_k)
+        v_new = jnp.where(gate[..., None, None], v_new.astype(v_cache.dtype),
+                          old_v)
+    k_cache = k_cache.at[b_idx, slots].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[b_idx, slots].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+def prefill_write(cfg: ModelConfig, k_cache, v_cache, k_new, v_new,
+                  seq_mask: Optional[jnp.ndarray] = None):
+    """Write a full prefill block (positions 0..T-1) into an empty cache.
+
+    With a ring cache only the last S positions land (earlier ones are
+    overwritten by the mod-S scatter, in order, which is exactly ring
+    semantics).
+    """
+    B, T = k_new.shape[:2]
+    S = k_cache.shape[1]
+    if T > S:
+        # ring cache shorter than the prompt: only the last S positions land
+        # (slice explicitly — a mod-S scatter with duplicate slots would have
+        # undefined winner order).
+        k_new, v_new = k_new[:, -S:], v_new[:, -S:]
+        if seq_mask is not None:
+            seq_mask = seq_mask[:, -S:]
+        off = jnp.full((B,), T - S, jnp.int32)
+        slots = write_slots(cfg, S, off, S)
+        return kv_write(k_cache, v_cache, k_new, v_new, slots, gate=seq_mask)
+    cur0 = jnp.zeros((B,), jnp.int32)
+    slots = write_slots(cfg, S, cur0, T)
+    return kv_write(k_cache, v_cache, k_new, v_new, slots, gate=seq_mask)
+
+
+# ----------------------------------------------------------------------------
+# recurrent-state select helpers (used by gated replay commit)
+# ----------------------------------------------------------------------------
+def select_step_state(states_per_step, old_state, n_commit: jnp.ndarray):
+    """states_per_step: pytree with leading (B, T, ...) per-step states;
+    old_state: matching (B, ...). Returns state after n_commit steps
+    (old state where n_commit == 0)."""
+    def sel(per_step, old):
+        B, T = per_step.shape[:2]
+        idx = jnp.clip(n_commit - 1, 0, T - 1)
+        picked = jnp.take_along_axis(
+            per_step, idx.reshape((B,) + (1,) * (per_step.ndim - 1)), axis=1
+        )[:, 0]
+        return jnp.where(
+            (n_commit > 0).reshape((B,) + (1,) * (old.ndim - 1)), picked, old)
+    return jax.tree_util.tree_map(sel, states_per_step, old_state)

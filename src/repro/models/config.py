@@ -1,0 +1,203 @@
+"""Model configuration covering every assigned architecture family.
+
+One dataclass describes dense / GQA / MQA / MoE / Mamba / xLSTM / hybrid /
+encoder-only / VLM+audio-backbone decoders.  Layers are described by a
+repeating ``block_pattern`` of (mixer, mlp) pairs so heterogeneous stacks
+(Jamba's 1:7 attention:mamba interleave, xLSTM's mLSTM/sLSTM mix,
+DeepSeek-MoE's dense first layer) compile to a compact scan-over-periods HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# Mixer kinds (sequence-mixing sublayer).
+ATTN = "attn"
+MAMBA = "mamba"
+MLSTM = "mlstm"
+SLSTM = "slstm"
+
+# MLP kinds (channel-mixing sublayer).
+SWIGLU = "swiglu"
+GEGLU = "geglu"
+RELU2 = "relu2"  # squared-ReLU (Nemotron-4)
+GELU = "gelu"    # plain 2-layer GELU MLP (HuBERT)
+MOE = "moe"
+NO_MLP = "none"  # xLSTM blocks carry their own projections
+
+ROPE_NONE = "none"
+ROPE = "rope"
+MROPE = "mrope"  # Qwen2-VL multimodal 3D RoPE
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One layer position inside the repeating pattern."""
+    mixer: str = ATTN
+    mlp: str = SWIGLU
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    arch_type: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""          # citation (arXiv id / model card)
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0          # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 512
+
+    # Repeating layer pattern; len must divide num_layers (after prefix).
+    block_pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    # Layers preceding the periodic body (e.g. DeepSeek-MoE dense layer 0).
+    prefix_blocks: Tuple[BlockSpec, ...] = ()
+
+    # Norm
+    norm: str = "rmsnorm"      # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    # Whether attention/mlp use parallel residual (not used by assigned archs)
+    qk_norm: bool = False
+
+    # Positional encoding
+    rope: str = ROPE
+    rope_theta: float = 10_000.0
+    partial_rotary_factor: float = 1.0   # StableLM-2: 0.25, Nemotron: 0.5
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w rotary halves
+
+    # Attention
+    causal: bool = True
+    sliding_window: Optional[int] = None  # Mixtral: 4096
+    attn_logit_softcap: Optional[float] = None
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 2
+    num_shared_experts: int = 0   # DeepSeek-MoE: 2
+    moe_d_ff: int = 0             # expert width (DeepSeek fine-grained: 1408)
+    router_aux_loss_coef: float = 0.01
+    moe_impl: str = "scatter"     # scatter | dense (dense = oracle for tests)
+    capacity_factor: float = 2.0
+
+    # Mamba (Jamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0        # 0 -> ceil(d_model / 16)
+
+    # xLSTM
+    xlstm_mlstm_proj_factor: float = 2.0
+    xlstm_slstm_proj_factor: float = 4.0 / 3.0
+    xlstm_conv_kernel: int = 4
+
+    # Embedding / head
+    tie_embeddings: bool = False
+    scale_embed: bool = False     # Gemma: x * sqrt(d_model)
+    encoder_only: bool = False    # HuBERT: bidirectional, no decode path
+    # Modality frontend stub: inputs are precomputed embeddings, not tokens.
+    embedding_inputs: bool = False
+
+    # Gemma-style GeGLU uses approximate tanh gelu
+    gelu_approx: bool = True
+
+    param_dtype: jnp.dtype = jnp.bfloat16
+    compute_dtype: jnp.dtype = jnp.bfloat16
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def rotary_dim(self) -> int:
+        rd = int(self.resolved_head_dim * self.partial_rotary_factor)
+        return rd - (rd % 2)
+
+    @property
+    def body_layers(self) -> int:
+        return self.num_layers - len(self.prefix_blocks)
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        assert self.body_layers % self.pattern_period == 0, (
+            f"{self.name}: body layers {self.body_layers} not divisible by "
+            f"pattern period {self.pattern_period}")
+        return self.body_layers // self.pattern_period
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff else self.d_ff
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.mamba_dt_rank if self.mamba_dt_rank else -(-self.d_model // 16)
+
+    def validate(self) -> "ModelConfig":
+        assert self.num_heads % self.num_kv_heads == 0, self.name
+        _ = self.num_periods
+        for b in tuple(self.prefix_blocks) + tuple(self.block_pattern):
+            assert b.mixer in (ATTN, MAMBA, MLSTM, SLSTM), b
+            assert b.mlp in (SWIGLU, GEGLU, RELU2, GELU, MOE, NO_MLP), b
+            if b.mlp == MOE:
+                assert self.num_experts > 0, self.name
+        if self.encoder_only:
+            assert not self.causal
+        return self
+
+    # Parameter count (for 6ND roofline math). Counts active params for MoE
+    # when ``active_only`` is set.
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        n = self.vocab_size * d  # input embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        total = n
+        blocks = list(self.prefix_blocks)
+        blocks += list(self.block_pattern) * self.num_periods
+        for b in blocks:
+            if b.mixer == ATTN:
+                total += d * (self.num_heads * hd) * 2  # q, o
+                total += d * (self.num_kv_heads * hd) * 2  # k, v
+            elif b.mixer == MAMBA:
+                di = self.mamba_d_inner
+                total += d * di * 2  # in_proj (x and z)
+                total += di * self.mamba_d_conv  # conv
+                total += di * (self.resolved_dt_rank + 2 * self.mamba_d_state)
+                total += self.resolved_dt_rank * di + di * self.mamba_d_state
+                total += di * d  # out proj
+            elif b.mixer == MLSTM:
+                di = int(self.d_model * self.xlstm_mlstm_proj_factor)
+                total += d * di * 2 + di * di * 3 + 3 * di + di * d
+            elif b.mixer == SLSTM:
+                total += 4 * d * d + d * int(self.d_model *
+                                             self.xlstm_slstm_proj_factor) * 2
+            if b.mlp in (SWIGLU, GEGLU):
+                total += 3 * d * self.d_ff
+            elif b.mlp in (RELU2, GELU):
+                total += 2 * d * self.d_ff
+            elif b.mlp == MOE:
+                e_ff = self.expert_d_ff
+                eff_experts = self.num_experts + self.num_shared_experts
+                if active_only:
+                    eff_experts = self.num_experts_per_tok + self.num_shared_experts
+                total += eff_experts * 3 * d * e_ff
+                total += d * self.num_experts  # router
+        return total
+
+
+def layer_blocks(cfg: ModelConfig) -> Tuple[BlockSpec, ...]:
+    """Full per-layer block list (prefix + periodic body expanded)."""
+    return tuple(cfg.prefix_blocks) + tuple(cfg.block_pattern) * cfg.num_periods

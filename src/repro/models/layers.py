@@ -1,0 +1,126 @@
+"""Shared layers: norms, MLP variants, embeddings, init helpers.
+
+Parameters are plain nested dicts of jnp arrays (no flax dependency).  Every
+layer is a pair of functions ``init_*(rng, cfg, ...) -> params`` and
+``apply_*(params, x, ...) -> y`` so stacks of layers can be ``jax.vmap``-ed
+into scanned super-blocks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import GEGLU, GELU, RELU2, SWIGLU, ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+def dense_init(rng, shape, dtype, scale: float = 1.0) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    fan_in = shape[0]
+    std = scale / (fan_in ** 0.5)
+    return (std * jax.random.truncated_normal(rng, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def embed_init(rng, shape, dtype) -> jnp.ndarray:
+    return (0.02 * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "bias": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+
+
+def apply_norm(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+def init_mlp(rng, cfg: ModelConfig, kind: str, d_ff: int = 0) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 3)
+    if kind in (SWIGLU, GEGLU):
+        return {"w_gate": dense_init(ks[0], (d, d_ff), dt),
+                "w_up": dense_init(ks[1], (d, d_ff), dt),
+                "w_down": dense_init(ks[2], (d_ff, d), dt)}
+    if kind in (RELU2, GELU):
+        return {"w_up": dense_init(ks[0], (d, d_ff), dt),
+                "w_down": dense_init(ks[1], (d_ff, d), dt)}
+    raise ValueError(kind)
+
+
+def _gelu(x, approx: bool):
+    return jax.nn.gelu(x, approximate=approx)
+
+
+def apply_mlp(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+              kind: str) -> jnp.ndarray:
+    x = x.astype(cfg.compute_dtype)
+    if kind == SWIGLU:
+        g = jax.nn.silu(x @ params["w_gate"].astype(cfg.compute_dtype))
+        u = x @ params["w_up"].astype(cfg.compute_dtype)
+        return (g * u) @ params["w_down"].astype(cfg.compute_dtype)
+    if kind == GEGLU:
+        g = _gelu(x @ params["w_gate"].astype(cfg.compute_dtype), cfg.gelu_approx)
+        u = x @ params["w_up"].astype(cfg.compute_dtype)
+        return (g * u) @ params["w_down"].astype(cfg.compute_dtype)
+    if kind == RELU2:  # squared ReLU (Nemotron-4)
+        h = jnp.square(jax.nn.relu(x @ params["w_up"].astype(cfg.compute_dtype)))
+        return h @ params["w_down"].astype(cfg.compute_dtype)
+    if kind == GELU:
+        h = _gelu(x @ params["w_up"].astype(cfg.compute_dtype), cfg.gelu_approx)
+        return h @ params["w_down"].astype(cfg.compute_dtype)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------------
+# embeddings / head
+# ----------------------------------------------------------------------------
+def init_embed(rng, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, 2)
+    p = {"embedding": embed_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                  cfg.param_dtype)
+    return p
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.scale_embed:  # Gemma
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return x
+
+
+def lm_logits(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(cfg.compute_dtype).T
+    else:
+        w = params["lm_head"].astype(cfg.compute_dtype)
+    return (x.astype(cfg.compute_dtype) @ w).astype(jnp.float32)

@@ -1,0 +1,193 @@
+"""Mamba-1 selective SSM block (Jamba's sequence mixer).
+
+TPU adaptation (see DESIGN.md §3): the CUDA hardware-aware scan becomes a
+*chunked* scan — ``lax.scan`` over chunks of the sequence, with a parallel
+``lax.associative_scan`` inside each chunk.  The (d_inner, d_state) state
+never materialises for the full sequence, only per-chunk, which is what keeps
+prefill_32k inside VMEM-sized working sets after sharding.
+
+Decode/verify runs the same core over the (w+1)-token speculative block from
+a cached (conv_state, ssm_state) — this is how the paper's batched
+verification is adapted to SSMs (the state is snapshotted before the step and
+recommitted for the winning row; see cache.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+MAMBA_CHUNK = 256
+
+
+def init_mamba(rng, cfg: ModelConfig) -> Params:
+    d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr, dc = cfg.resolved_dt_rank, cfg.mamba_d_conv
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 6)
+    # S4D-real initialisation of A
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (dc, di), dt, scale=1.0),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dt),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                             * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)),
+                     min=1e-4))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dt),
+    }
+
+
+def _causal_conv_full(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                      state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. u: (B,T,di); w: (dc,di); state: (B,dc-1,di).
+
+    Returns conv output (B,T,di) and the new state (last dc-1 inputs).
+    """
+    dc = w.shape[0]
+    ext = jnp.concatenate([state.astype(u.dtype), u], axis=1)  # (B, T+dc-1, di)
+    out = jnp.zeros_like(u)
+    for i in range(dc):
+        out = out + ext[:, i:i + u.shape[1], :] * w[i].astype(u.dtype)
+    new_state = ext[:, -(dc - 1):, :] if dc > 1 else state
+    return out + b.astype(u.dtype), new_state
+
+
+def _ssm_chunk_body(A: jnp.ndarray, h: jnp.ndarray, u_c, dt_c, B_c, C_c):
+    """One chunk of the selective scan.  All f32.
+
+    h: (B, di, ds); u_c/dt_c: (B, c, di); B_c/C_c: (B, c, ds).
+    """
+    dA = jnp.exp(dt_c[..., None] * A)                       # (B,c,di,ds)
+    dBx = (dt_c * u_c)[..., None] * B_c[:, :, None, :]      # (B,c,di,ds)
+
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    cumA, hs = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+    hs = hs + cumA * h[:, None]                              # fold carry in
+    y = jnp.einsum("bcds,bcs->bcd", hs, C_c)
+    return hs[:, -1], y
+
+
+def selective_scan(u: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                   h0: jnp.ndarray, chunk: int = MAMBA_CHUNK
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """u/dt: (B,T,di) f32; B/C: (B,T,ds) f32; h0: (B,di,ds) f32.
+
+    Returns (y (B,T,di), h_final).
+    """
+    from .runtime_flags import UNROLL_FOR_ANALYSIS
+    Bt, T, di = u.shape
+    if T <= chunk:
+        h, y = _ssm_chunk_body(A, h0, u, dt, B, C)
+        return y + u * D, h
+    assert T % chunk == 0, f"T={T} not a multiple of chunk={chunk}"
+    nc = T // chunk
+    u_c = u.reshape(Bt, nc, chunk, di).swapaxes(0, 1)
+    dt_c = dt.reshape(Bt, nc, chunk, di).swapaxes(0, 1)
+    B_c = B.reshape(Bt, nc, chunk, -1).swapaxes(0, 1)
+    C_c = C.reshape(Bt, nc, chunk, -1).swapaxes(0, 1)
+
+    def body(h, xs):
+        uc, dtc, bc, cc = xs
+        h_new, y = _ssm_chunk_body(A, h, uc, dtc, bc, cc)
+        return h_new, y
+
+    if UNROLL_FOR_ANALYSIS:
+        # python loop over chunks: exact HloCostAnalysis (roofline calib)
+        h, ys = h0, []
+        for i in range(nc):
+            h, y_i = body(h, (u_c[i], dt_c[i], B_c[i], C_c[i]))
+            ys.append(y_i)
+        y = jnp.stack(ys).swapaxes(0, 1).reshape(Bt, T, di)
+        return y + u * D, h
+
+    h_final, ys = jax.lax.scan(body, h0, (u_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bt, T, di)
+    return y + u * D, h_final
+
+
+def mamba_mix(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+              conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full block: works for prefill (T large) and verify steps (T = w+1).
+
+    conv_state: (B, dc-1, di); ssm_state: (B, di, ds) f32.
+    Returns (y (B,T,d), new_conv_state, new_ssm_state).
+    """
+    cd = cfg.compute_dtype
+    di, ds, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.resolved_dt_rank
+    xz = x.astype(cd) @ params["in_proj"].astype(cd)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, new_conv = _causal_conv_full(u, params["conv_w"], params["conv_b"],
+                                    conv_state)
+    u = jax.nn.silu(u)
+    proj = (u @ params["x_proj"].astype(cd)).astype(jnp.float32)
+    dt_low, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h_new = selective_scan(u.astype(jnp.float32), dt, A, Bm, Cm,
+                              params["D"], ssm_state)
+    y = (y.astype(cd) * jax.nn.silu(z)) @ params["out_proj"].astype(cd)
+    return y, new_conv, h_new
+
+
+def mamba_mix_steps(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                    conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """Like ``mamba_mix`` but returns per-step states (for speculative commit:
+    the winner row's state after n accepted tokens is selected post hoc).
+
+    T must be small (the w+1 speculative block).  Returns
+    (y, conv_ext (B, T+dc-1, di), ssm_steps (B, T, di, ds)).
+    State after t steps: conv = conv_ext[:, t:t+dc-1], ssm = ssm_steps[:, t-1].
+    """
+    cd = cfg.compute_dtype
+    ds, dtr = cfg.mamba_d_state, cfg.resolved_dt_rank
+    dc = cfg.mamba_d_conv
+    xz = x.astype(cd) @ params["in_proj"].astype(cd)
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_ext = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(dc):
+        out = out + conv_ext[:, i:i + u.shape[1], :] * \
+            params["conv_w"][i].astype(u.dtype)
+    u = jax.nn.silu(out + params["conv_b"].astype(u.dtype))
+    proj = (u @ params["x_proj"].astype(cd)).astype(jnp.float32)
+    dt_low, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    uf = u.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = (dt * uf)[..., None] * Bm[:, :, None, :]
+
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    cumA, hs = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+    hs = hs + cumA * ssm_state[:, None]
+    y = jnp.einsum("bcds,bcs->bcd", hs, Cm) + uf * params["D"]
+    y = (y.astype(cd) * jax.nn.silu(z)) @ params["out_proj"].astype(cd)
+    return y, conv_ext, hs
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Tuple[jnp.ndarray,
+                                                            jnp.ndarray]:
+    conv = jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner),
+                     cfg.compute_dtype)
+    ssm = jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32)
+    return conv, ssm

@@ -1,0 +1,185 @@
+"""Top-level language-model API: init / forward / prefill / decode / verify.
+
+These are the pure functions the training loop, the serving engine and the
+speculative-decoding core compose.  Everything is jit-friendly: shapes are
+static, sequence advance is tracked by ``state["cur_len"]``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .cache import group_ids, init_state, key_positions, kv_write, write_slots
+from .config import ATTN, MROPE, ModelConfig, layer_blocks
+from .layers import apply_norm, embed_tokens, lm_logits
+from .transformer import init_params, run_stack
+
+Params = Dict[str, Any]
+State = Dict[str, Any]
+
+__all__ = ["init_params", "init_state", "forward", "prefill", "decode",
+           "verify", "commit_kv_tails", "has_recurrent", "make_positions"]
+
+
+def has_recurrent(cfg: ModelConfig) -> bool:
+    return any(b.mixer != ATTN for b in layer_blocks(cfg))
+
+
+def make_positions(cfg: ModelConfig, B: int, T: int,
+                   offset: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    if offset is not None:
+        pos = pos + offset[:, None]
+    if cfg.rope == MROPE:
+        # text tokens: t/h/w positions coincide (Qwen2-VL §3.1)
+        pos = jnp.broadcast_to(pos[None], (3, B, T))
+    return pos
+
+
+def _embed(params: Params, cfg: ModelConfig, tokens, embeds):
+    if embeds is not None:
+        return embeds.astype(cfg.compute_dtype)
+    return embed_tokens(params["embed"], tokens, cfg)
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens=None,
+                   embeds=None, positions=None, remat: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward up to the final norm. Returns (hidden (B,T,d), moe_aux).
+
+    Splitting the LM head out lets the training loss compute logits in
+    vocab/time chunks (train_loop.chunked_lm_loss) — materialising the full
+    (B, T, 256k) f32 logits of Nemotron/Gemma-class vocabs would not fit
+    v5e HBM.
+    """
+    x = _embed(params, cfg, tokens, embeds)
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = make_positions(cfg, B, T)
+    ctx = {"positions": positions}
+    x, _, aux = run_stack(params, cfg, x, "full", None, ctx, remat=remat)
+    return apply_norm(params["final_norm"], x, cfg), aux
+
+
+def forward(params: Params, cfg: ModelConfig, tokens=None, embeds=None,
+            positions=None, remat: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward (train / scoring). Returns (logits f32, moe_aux)."""
+    x, aux = forward_hidden(params, cfg, tokens, embeds, positions, remat)
+    return lm_logits(params["embed"], x, cfg), aux
+
+
+def prefill(params: Params, cfg: ModelConfig, state: State, tokens=None,
+            embeds=None, positions=None,
+            last_only: bool = False) -> Tuple[jnp.ndarray, State]:
+    """Process the prompt, populating ``state``. All rows same length T.
+
+    ``state`` must be freshly allocated (cur_len == 0).  ``last_only``
+    computes logits for the final position only (serving never needs the
+    rest; a 32k x 152k-vocab logit tensor would dwarf the KV cache).
+    """
+    x = _embed(params, cfg, tokens, embeds)
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = make_positions(cfg, B, T)
+    ctx = {"positions": positions}
+    x, new_groups, _ = run_stack(params, cfg, x, "prefill", state, ctx)
+    x = apply_norm(params["final_norm"], x, cfg)
+    if last_only:
+        x = x[:, -1:]
+    logits = lm_logits(params["embed"], x, cfg)
+    new_state = {"cur_len": state["cur_len"] + T,
+                 "groups": {**state["groups"], **new_groups}}
+    return logits, new_state
+
+
+def decode(params: Params, cfg: ModelConfig, state: State,
+           tokens: jnp.ndarray,
+           n_commit: Optional[jnp.ndarray] = None
+           ) -> Tuple[jnp.ndarray, State]:
+    """Decode T new tokens from cached state.
+
+    With ``n_commit`` (B,), runs in *replay* mode: only the first n_commit
+    positions of each row update the caches/recurrent state — this is the
+    speculative commit of the winning draft (paper App. D's "overwrite all
+    rows with the accepted speculation", adapted to recurrent state).
+    """
+    B, T = tokens.shape[:2]
+    cur = state["cur_len"]
+    positions = make_positions(cfg, B, T, offset=cur)
+    gid0 = next(gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN
+                ) if not _pure_recurrent(cfg) else None
+    S = (state["groups"][gid0]["k"].shape[2] if gid0 is not None else 0)
+    adv = n_commit if n_commit is not None else T
+    ctx: Dict[str, Any] = {"positions": positions}
+    if gid0 is not None:
+        ctx["cache_pos"] = key_positions(cfg, S, cur)   # pre-write owners
+        ctx["slots"] = write_slots(cfg, S, cur, T)
+    mode = "decode"
+    if n_commit is not None:
+        mode = "replay"
+        ctx["n_commit"] = n_commit
+        if gid0 is not None:
+            ctx["gate"] = jnp.arange(T)[None, :] < n_commit[:, None]
+    x = _embed(params, cfg, tokens, None)
+    x, new_groups, _ = run_stack(params, cfg, x, mode, state, ctx)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg)
+    adv = n_commit if n_commit is not None else T
+    new_state = {"cur_len": cur + adv,
+                 "groups": {**state["groups"], **new_groups}}
+    return logits, new_state
+
+
+def verify(params: Params, cfg: ModelConfig, state: State,
+           tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """The paper's batched verification call.
+
+    tokens: (B, k, w+1) — row i is [last_token, draft_i(0..w-1)].
+    Returns (logits (B, k, w+1, V) f32, kv_tails for attention groups).
+    State is NOT advanced (pure read).
+    """
+    B, K, W1 = tokens.shape
+    cur = state["cur_len"]
+    positions = make_positions(cfg, B, W1, offset=cur)
+    gid0 = next((gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN), None)
+    ctx: Dict[str, Any] = {"positions": positions, "k_rows": K}
+    if gid0 is not None:
+        S = state["groups"][gid0]["k"].shape[2]
+        ctx["cache_pos"] = key_positions(cfg, S, cur)
+    x = _embed(params, cfg, tokens.reshape(B * K, W1), None)
+    x, kv_tails, _ = run_stack(params, cfg, x, "verify", state, ctx)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg)
+    return logits.reshape(B, K, W1, -1), kv_tails
+
+
+def commit_kv_tails(cfg: ModelConfig, state: State, kv_tails: Dict,
+                    winner: jnp.ndarray, n_commit: jnp.ndarray) -> State:
+    """Fast commit for attention-only archs: write the winning row's accepted
+    KV tail into the shared cache (no replay forward needed)."""
+    cur = state["cur_len"]
+    groups = dict(state["groups"])
+    gid0 = next(gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN)
+    S = state["groups"][gid0]["k"].shape[2]
+    W1 = None
+    for gid, tails in kv_tails.items():
+        k_t, v_t = tails["k_tail"], tails["v_tail"]  # (R,B,K,W1,KV,hd)
+        R, B, K, W1 = k_t.shape[:4]
+        wsel = winner.reshape(1, B, 1, 1, 1, 1)
+        k_w = jnp.take_along_axis(k_t, wsel, axis=2)[:, :, 0]  # (R,B,W1,KV,hd)
+        v_w = jnp.take_along_axis(v_t, wsel, axis=2)[:, :, 0]
+        slots = write_slots(cfg, S, cur, W1)
+        gate = jnp.arange(W1)[None, :] < n_commit[:, None]
+        kc, vc = jax.vmap(
+            lambda kcache, vcache, kn, vn: kv_write(kcache, vcache, kn, vn,
+                                                    slots, gate=gate)
+        )(state["groups"][gid]["k"], state["groups"][gid]["v"], k_w, v_w)
+        groups[gid] = {"k": kc, "v": vc}
+    return {"cur_len": cur + n_commit, "groups": groups}
+
+
+def _pure_recurrent(cfg: ModelConfig) -> bool:
+    return all(b.mixer != ATTN for b in layer_blocks(cfg))

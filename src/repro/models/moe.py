@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer: top-k router, shared experts, two dispatch impls.
+
+Covers Mixtral (8e top-2), DeepSeek-MoE (2 shared + 64 routed top-6,
+fine-grained expert width) and Jamba (16e top-2).
+
+Dispatch implementations:
+  - ``dense``:   every expert computes every token, combined with router
+                 weights.  O(E) FLOPs — used only as the correctness oracle
+                 in tests and for tiny models.
+  - ``scatter``: sort-based dropless-ish dispatch with capacity (the MaxText
+                 approach): token-slots are sorted by expert id, packed into
+                 an (E, C, d) buffer, batched expert matmuls, then combined
+                 back.  Active-FLOPs-faithful, shards over the ``model`` axis
+                 on the expert dimension, and is what the roofline sees.
+
+Router aux loss (load balancing, Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(rng, cfg: ModelConfig) -> Params:
+    d, e_ff = cfg.d_model, cfg.expert_d_ff
+    E = cfg.num_experts
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, e_ff), dt),
+        "w_up": dense_init(ks[2], (E, d, e_ff), dt),
+        "w_down": dense_init(ks[3], (E, e_ff, d), dt),
+    }
+    if cfg.num_shared_experts:
+        s_ff = e_ff * cfg.num_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared_gate"] = dense_init(ks2[0], (d, s_ff), dt)
+        p["shared_up"] = dense_init(ks2[1], (d, s_ff), dt)
+        p["shared_down"] = dense_init(ks2[2], (s_ff, d), dt)
+    return p
+
+
+def _expert_ffn(wg, wu, wd, x, cd):
+    """x: (E, C, d) -> (E, C, d) batched SwiGLU over experts."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg.astype(cd)))
+    u = jnp.einsum("ecd,edf->ecf", x, wu.astype(cd))
+    return jnp.einsum("ecf,efd->ecd", g * u, wd.astype(cd))
+
+
+def _router(params: Params, x2d: jnp.ndarray, cfg: ModelConfig):
+    """Returns (topk_idx (N,K), topk_w (N,K), aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ params["router"]           # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balance loss
+    E = cfg.num_experts
+    me = probs.mean(axis=0)                                        # (E,)
+    ce = jnp.zeros((E,)).at[topk_idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = E * jnp.sum(me * ce)
+    return topk_idx, topk_w, aux
+
+
+def moe_dense(params: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """Oracle: all experts on all tokens. x: (B,T,d)."""
+    cd = cfg.compute_dtype
+    B, T, d = x.shape
+    x2d = x.reshape(-1, d).astype(cd)
+    idx, w, aux = _router(params, x2d, cfg)
+    E = cfg.num_experts
+    outs = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                       jnp.broadcast_to(x2d, (E,) + x2d.shape), cd)  # (E,N,d)
+    onehot = jax.nn.one_hot(idx, E, dtype=cd) * w.astype(cd)[..., None]
+    comb = jnp.einsum("nke,end->nd", onehot, outs)
+    return comb.reshape(B, T, d), aux
+
+
+def moe_scatter(params: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """Sort-based capacity dispatch. x: (B,T,d)."""
+    cd = cfg.compute_dtype
+    B, T, d = x.shape
+    N = B * T
+    K = cfg.num_experts_per_tok
+    E = cfg.num_experts
+    C = max(int(N * K / E * cfg.capacity_factor), K)
+    x2d = x.reshape(N, d).astype(cd)
+    idx, w, aux = _router(params, x2d, cfg)                        # (N,K)
+    flat_e = idx.reshape(-1)                                       # (N*K,)
+    flat_t = jnp.repeat(jnp.arange(N), K)
+    flat_w = w.reshape(-1)
+    # position of each slot within its expert (stable over token order)
+    order = jnp.argsort(flat_e, stable=True)
+    ranks = jnp.zeros((N * K,), jnp.int32)
+    seg = jax.nn.one_hot(flat_e[order], E, dtype=jnp.int32)
+    pos_sorted = jnp.cumsum(seg, axis=0)[jnp.arange(N * K), flat_e[order]] - 1
+    ranks = ranks.at[order].set(pos_sorted)
+    keep = ranks < C
+    # scatter tokens into (E, C, d)
+    buf = jnp.zeros((E, C, d), cd)
+    e_idx = jnp.where(keep, flat_e, 0)
+    c_idx = jnp.where(keep, ranks, 0)
+    vals = jnp.where(keep[:, None], x2d[flat_t], 0)
+    buf = buf.at[e_idx, c_idx].add(vals)
+    out_buf = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"],
+                          buf, cd)                                  # (E,C,d)
+    gathered = out_buf[e_idx, c_idx]                                # (N*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0) * flat_w[:, None].astype(cd)
+    comb = jnp.zeros((N, d), cd).at[flat_t].add(gathered)
+    return comb.reshape(B, T, d), aux
+
+
+def apply_moe(params: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """Returns (y, aux_loss). Adds shared experts (DeepSeek) when present."""
+    impl = moe_dense if cfg.moe_impl == "dense" else moe_scatter
+    y, aux = impl(params, x, cfg)
+    if cfg.num_shared_experts:
+        cd = cfg.compute_dtype
+        xs = x.astype(cd)
+        g = jax.nn.silu(xs @ params["shared_gate"].astype(cd))
+        u = xs @ params["shared_up"].astype(cd)
+        y = y + (g * u) @ params["shared_down"].astype(cd)
+    return y, aux

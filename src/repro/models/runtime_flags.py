@@ -1,0 +1,20 @@
+"""Process-wide execution flags.
+
+UNROLL_FOR_ANALYSIS: XLA's HloCostAnalysis counts a while-loop body ONCE, so
+flops/bytes/collectives of scan-over-layers programs are undercounted by the
+trip count.  The dry-run's roofline calibration sets this flag and compiles
+two REDUCED-depth variants (1 and 2 pattern periods) with every scan
+replaced by an unrolled python loop / single-chunk form, then extrapolates
+linearly in depth (benchmarks/roofline.py).  Production lowering always
+keeps the compact scans.
+
+Exception that remains scanned even here: the sLSTM time recurrence (it is
+inherently sequential, xLSTM paper §2); its flops are corrected analytically
+in the roofline.
+"""
+UNROLL_FOR_ANALYSIS = False
+
+
+def set_unroll(v: bool) -> None:
+    global UNROLL_FOR_ANALYSIS
+    UNROLL_FOR_ANALYSIS = v

@@ -1,0 +1,314 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to arXiv:2405.04517 at block level:
+  - mLSTM block: pre-LN -> up-proj (pf=2) -> causal conv + silu -> q/k/v ->
+    matrix-memory cell with exponential gating + stabiliser -> per-head
+    group-norm -> gate with silu(z) -> down-proj.
+  - sLSTM block: pre-LN -> headwise recurrent cell (h_{t-1} feedback, which
+    makes it inherently sequential) -> group-norm -> gated FFN (pf=4/3).
+
+Sequence processing uses ``lax.scan`` over time.  sLSTM *cannot* be
+parallelised over time (gates see h_{t-1}); mLSTM can — the chunkwise-parallel
+mLSTM form is implemented as a beyond-paper perf option (see
+``mlstm_mix_chunkwise`` and EXPERIMENTS.md §Perf).
+
+States (per layer):
+  mLSTM: C (B,H,dh,dh) f32, n (B,H,dh) f32, m (B,H) f32
+  sLSTM: c,n,h (B,H,dh) f32, m (B,H,dh) f32
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+def init_mlstm(rng, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = int(d * cfg.xlstm_mlstm_proj_factor)
+    nh = cfg.num_heads
+    dt = cfg.param_dtype
+    ks = jax.random.split(rng, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (cfg.xlstm_conv_kernel, di), dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "wq": dense_init(ks[2], (di, di), dt),
+        "wk": dense_init(ks[3], (di, di), dt),
+        "wv": dense_init(ks[4], (di, di), dt),
+        "w_if": dense_init(ks[5], (di, 2 * nh), dt),
+        "b_i": jnp.zeros((nh,), jnp.float32) - 3.0,
+        "b_f": jnp.zeros((nh,), jnp.float32) + 3.0,
+        "gn_scale": jnp.ones((di,), dt),
+        "skip": jnp.ones((di,), dt),
+        "down_proj": dense_init(ks[6], (di, d), dt),
+    }
+
+
+def _groupnorm_heads(x: jnp.ndarray, scale: jnp.ndarray, nh: int,
+                     eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head group norm over (..., di) with di = nh*dh."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (nh, shp[-1] // nh)).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_cell_scan(q, k, v, log_i, log_f, C0, n0, m0, per_step: bool = False):
+    """Recurrent mLSTM cell over time.
+
+    q/k/v: (B,T,H,dh) f32; log_i/log_f: (B,T,H) f32.
+    Returns h (B,T,H,dh), (C,n,m) finals — or per-step state trees with a
+    (B, T, ...) leading layout when ``per_step`` (speculative commit path).
+    """
+    dh = q.shape[-1]
+    k = k / (dh ** 0.5)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs
+        m_new = jnp.maximum(lf + m, li)                       # (B,H)
+        i_p = jnp.exp(li - m_new)[..., None]
+        f_p = jnp.exp(lf + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (vt[..., :, None]
+                                                   * kt[..., None, :])
+        n = f_p * n + i_p * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        out = num / den
+        y = (out, (C, n, m_new)) if per_step else out
+        return (C, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, log_i, log_f))
+    final, ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    if per_step:
+        hs, states = ys
+        states = jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 0, 1), states)
+        return jnp.moveaxis(hs, 0, 1), states
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def _mlstm_one_chunk(q, k, v, log_i, log_f, C0, n0, m0):
+    """Single-chunk quadratic mLSTM over the whole sequence (scan-free)."""
+    dh = q.shape[-1]
+    k = k / (dh ** 0.5)
+    body = _make_mlstm_chunk_body(q.shape[1])
+    (C, n, m), h = body((C0, n0, m0), (q, k, v, log_i, log_f))
+    return h, (C, n, m)
+
+
+def _mlstm_cell_chunkwise(q, k, v, log_i, log_f, C0, n0, m0, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (beyond-paper perf path; same math).
+
+    Intra-chunk contributions use a masked quadratic (attention-like) form;
+    inter-chunk state is carried with scan.  Numerically stabilised per chunk.
+    """
+    B, T, H, dh = q.shape
+    if T % chunk != 0 or T <= chunk:
+        return _mlstm_cell_scan(q, k, v, log_i, log_f, C0, n0, m0)
+    k = k / (dh ** 0.5)
+    nc = T // chunk
+
+    def rs(a):  # (B,T,...) -> (nc, B, c, ...)
+        return jnp.moveaxis(a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = map(rs, (q, k, v, log_i, log_f))
+    body = _make_mlstm_chunk_body(chunk)
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, T, H, dh), (C, n, m)
+
+
+def _make_mlstm_chunk_body(chunk: int):
+    def body(carry, xs):
+        # C is stored with log-scale m: true state = C * exp(m).
+        C, n, m = carry                       # (B,H,dh,dh),(B,H,dh),(B,H)
+        qt, kt, vt, li, lf = xs               # (B,c,H,*)
+        li = jnp.moveaxis(li, -1, 1)          # (B,H,c)
+        lf = jnp.moveaxis(lf, -1, 1)
+        F = jnp.cumsum(lf, axis=-1)           # logF_t (B,H,c)
+        a = li - F                            # a_s = li_s - logF_s
+        # stabiliser: m_t = logF_t + max(m_carry, cummax_s<=t a_s)
+        m_t = F + jnp.maximum(m[..., None],
+                              jax.lax.cummax(a, axis=a.ndim - 1))  # (B,H,c)
+        # source weights w[t,s] = exp(logF_t + a_s - m_t), s <= t
+        i_w = jnp.exp(F[..., :, None] + a[..., None, :] - m_t[..., :, None])
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        i_w = jnp.where(mask, i_w, 0.0)                        # (B,H,t,s)
+        carry_w = jnp.exp(F + m[..., None] - m_t)              # (B,H,c)
+        qh = jnp.moveaxis(qt, 1, 2)          # (B,H,c,dh)
+        kh = jnp.moveaxis(kt, 1, 2)
+        vh = jnp.moveaxis(vt, 1, 2)
+        # intra-chunk attention-like term + inter-chunk carried state
+        qk = jnp.einsum("bhtd,bhsd->bhts", qh, kh) * i_w
+        num = jnp.einsum("bhts,bhsd->bhtd", qk, vh)
+        num = num + carry_w[..., None] * jnp.einsum("bhvk,bhtk->bhtv", C, qh)
+        nvec = jnp.einsum("bhts,bhsd->bhtd", i_w, kh)
+        nvec = nvec + carry_w[..., None] * n[..., None, :]
+        den = jnp.abs(jnp.einsum("bhtd,bhtd->bht", nvec, qh))
+        den = jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        h = num / den                          # (B,H,c,dh)
+        # chunk-final state, stored at scale m_new = m_t[last]
+        m_new = m_t[..., -1]
+        w_s = jnp.exp(F[..., -1:] + a - m_new[..., None])      # (B,H,c)
+        decay = jnp.exp(F[..., -1] + m - m_new)
+        C_new = (decay[..., None, None] * C
+                 + jnp.einsum("bhs,bhsv,bhsk->bhvk", w_s, vh, kh))
+        n_new = (decay[..., None] * n
+                 + jnp.einsum("bhs,bhsk->bhk", w_s, kh))
+        return (C_new, n_new, m_new), jnp.moveaxis(h, 2, 1)
+
+    return body
+
+
+def mlstm_mix(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+              state: Tuple, conv_state: jnp.ndarray,
+              chunkwise: bool = False, per_step: bool = False):
+    """x: (B,T,d). state: (C,n,m). conv_state: (B, k-1, di).
+
+    Returns (y, new_state, new_conv_state).  With ``per_step``, new_state
+    leaves are (B, T, ...) per-step states and new_conv_state is the full
+    (B, T+k-1, di) conv window extension (commit selects a slice).
+    """
+    from .mamba import _causal_conv_full  # same depthwise causal conv
+    cd = cfg.compute_dtype
+    nh = cfg.num_heads
+    B, T, _ = x.shape
+    up = x.astype(cd) @ params["up_proj"].astype(cd)
+    xm, z = jnp.split(up, 2, axis=-1)
+    di = xm.shape[-1]
+    dh = di // nh
+    if per_step:
+        # keep the full conv window extension so commit can select any step
+        dc = params["conv_w"].shape[0]
+        ext = jnp.concatenate([conv_state.astype(xm.dtype), xm], axis=1)
+        xc = jnp.zeros_like(xm)
+        for i in range(dc):
+            xc = xc + ext[:, i:i + xm.shape[1], :] * \
+                params["conv_w"][i].astype(xm.dtype)
+        xc = xc + params["conv_b"].astype(xm.dtype)
+        new_conv = ext
+    else:
+        xc, new_conv = _causal_conv_full(xm, params["conv_w"],
+                                         params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ params["wq"].astype(cd)).reshape(B, T, nh, dh).astype(jnp.float32)
+    k = (xc @ params["wk"].astype(cd)).reshape(B, T, nh, dh).astype(jnp.float32)
+    v = (xm @ params["wv"].astype(cd)).reshape(B, T, nh, dh).astype(jnp.float32)
+    if_gates = (xc @ params["w_if"].astype(cd)).astype(jnp.float32)
+    log_i = if_gates[..., :nh] + params["b_i"]
+    log_f = jax.nn.log_sigmoid(if_gates[..., nh:] + params["b_f"])
+    # NOTE: in roofline-calibration (UNROLL) mode the mLSTM stays a scan on
+    # purpose — the quadratic chunk form has *different* FLOPs than the
+    # production recurrence; the missing (T-1) body repeats are corrected
+    # analytically in benchmarks/roofline.py, like sLSTM.
+    if per_step:
+        h, new_state = _mlstm_cell_scan(q, k, v, log_i, log_f, *state,
+                                        per_step=True)
+    else:
+        cell = _mlstm_cell_chunkwise if chunkwise else _mlstm_cell_scan
+        h, new_state = cell(q, k, v, log_i, log_f, *state)
+    h = h.reshape(B, T, di).astype(cd)
+    h = _groupnorm_heads(h, params["gn_scale"], nh)
+    h = h + params["skip"].astype(cd) * xc
+    y = (h * jax.nn.silu(z)) @ params["down_proj"].astype(cd)
+    return y, new_state, new_conv
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    nh = cfg.num_heads
+    di = int(cfg.d_model * cfg.xlstm_mlstm_proj_factor)
+    dh = di // nh
+    C = jnp.zeros((batch, nh, dh, dh), jnp.float32)
+    n = jnp.zeros((batch, nh, dh), jnp.float32)
+    m = jnp.zeros((batch, nh), jnp.float32) - 1e9
+    conv = jnp.zeros((batch, cfg.xlstm_conv_kernel - 1, di), cfg.compute_dtype)
+    return (C, n, m), conv
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+def init_slstm(rng, cfg: ModelConfig) -> Params:
+    d, nh = cfg.d_model, cfg.num_heads
+    dh = d // nh
+    dt = cfg.param_dtype
+    d_ff = int(d * cfg.xlstm_slstm_proj_factor)
+    ks = jax.random.split(rng, 7)
+    # input weights for z,i,f,o ; headwise recurrent weights
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dt),
+        "r": dense_init(ks[1], (4, nh, dh, dh), jnp.float32, scale=1.0),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.zeros((d,)) - 3.0,
+                              jnp.zeros((d,)) + 3.0,
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), dt),
+        "ffn_gate": dense_init(ks[2], (d, d_ff), dt),
+        "ffn_up": dense_init(ks[3], (d, d_ff), dt),
+        "ffn_down": dense_init(ks[4], (d_ff, d), dt),
+    }
+
+
+def slstm_mix(params: Params, x: jnp.ndarray, cfg: ModelConfig, state: Tuple,
+              per_step: bool = False):
+    """x: (B,T,d); state: (c,n,h,m) each (B,H,dh) f32. Sequential by nature.
+
+    With ``per_step`` the returned state leaves are (B, T, ...)."""
+    cd = cfg.compute_dtype
+    nh = cfg.num_heads
+    B, T, d = x.shape
+    dh = d // nh
+    pre = (x.astype(cd) @ params["w_in"].astype(cd)).astype(jnp.float32)
+    pre = pre + params["b"]
+    pre = pre.reshape(B, T, 4, nh, dh)
+    R = params["r"]  # (4, nh, dh, dh)
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        rec = jnp.einsum("ghij,bhj->bghi", R, h)  # (B,4,H,dh)
+        zt = jnp.tanh(xt[:, 0] + rec[:, 0])
+        it = xt[:, 1] + rec[:, 1]
+        ft = jax.nn.log_sigmoid(xt[:, 2] + rec[:, 2])
+        ot = jax.nn.sigmoid(xt[:, 3] + rec[:, 3])
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        carry = (c_new, n_new, h_new, m_new)
+        return carry, ((h_new, carry) if per_step else h_new)
+
+    xs = jnp.moveaxis(pre, 1, 0)
+    new_state, ys = jax.lax.scan(step, state, xs)
+    if per_step:
+        hs, states = ys
+        new_state = jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 0, 1),
+                                           states)
+    else:
+        hs = ys
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(cd)
+    h = _groupnorm_heads(h, params["gn_scale"], nh)
+    # gated FFN (pf = 4/3)
+    g = jax.nn.gelu(h @ params["ffn_gate"].astype(cd))
+    u = h @ params["ffn_up"].astype(cd)
+    y = (g * u) @ params["ffn_down"].astype(cd)
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return (z, z, z, z - 1e9)

@@ -1,0 +1,119 @@
+"""Serving engine: ties the scheduler to the jitted speculative generator.
+
+One ``ServingEngine`` owns (params, cfg, tables) and serves batched requests
+with either plain greedy decoding or the paper's batched speculation —
+switching is one constructor argument, which is the paper's P3
+('plug-and-play', no model modification).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ngram_tables import NGramTables, build_bigram, build_unigram
+from ..core.spec_engine import SpecConfig, generate
+from ..data.tokenizer import ByteTokenizer
+from ..models import model as M
+from ..models.config import ModelConfig
+from .scheduler import Batch, Request, Scheduler
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig,
+                 spec: Optional[SpecConfig] = None,
+                 tables: Optional[NGramTables] = None,
+                 max_batch: int = 8,
+                 adaptive: bool = False):
+        """``adaptive``: pick (k, w) per batch with the UCB controller
+        (core/controller.py, beyond-paper) instead of a static setting."""
+        self.params = params
+        self.cfg = cfg
+        self.spec = spec or SpecConfig(strategy="greedy")
+        self.tok = ByteTokenizer()
+        self.scheduler = Scheduler(max_batch=max_batch)
+        self.controller = None
+        if adaptive:
+            from ..core.controller import AdaptiveKW
+            self.controller = AdaptiveKW(cfg)
+        if (self.spec.strategy != "greedy" or adaptive) and tables is None:
+            tables = self.build_tables(k_max=max(self.spec.k, 25),
+                                       w_max=max(self.spec.w, 16))
+        self.tables = tables
+        self._gen_cache: Dict = {}
+
+    # ------------------------------------------------------------------
+    def build_tables(self, k_max: int = 16, w_max: int = 16,
+                     batch: int = 256) -> NGramTables:
+        """One-off model sweep (paper: <1 min for a 7B on one A100)."""
+        fwd = jax.jit(lambda t: M.forward(self.params, self.cfg,
+                                          tokens=t)[0][:, -1])
+        topk, chain = build_bigram(fwd, self.cfg.vocab_size, k_max=k_max,
+                                   w_max=w_max, batch=batch)
+        uni = build_unigram(self.params["embed"]["embedding"],
+                            self.params["embed"].get(
+                                "lm_head",
+                                self.params["embed"]["embedding"].T),
+                            k_max=k_max)
+        return NGramTables(unigram_topk=uni, bigram_topk=topk,
+                           bigram_chain=chain)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: str, max_new_tokens: int = 64) -> Request:
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens)
+        self.scheduler.submit(req)
+        return req
+
+    def _gen_fn(self, max_new: int, kw=None):
+        key = (max_new, kw)
+        if key not in self._gen_cache:
+            spec = dataclasses.replace(self.spec, max_new_tokens=max_new)
+            if kw is not None:                      # adaptive controller arm
+                k, w = kw
+                strategy = ("greedy" if w == 0 else
+                            ("mixed" if self.spec.strategy == "greedy"
+                             else self.spec.strategy))
+                spec = dataclasses.replace(spec, k=max(k, 1), w=max(w, 1),
+                                           strategy=strategy)
+            self._gen_cache[key] = jax.jit(
+                lambda p, toks, tbl: generate(p, self.cfg, spec, toks, tbl))
+        return self._gen_cache[key]
+
+    def run_batch(self, batch: Batch) -> List[Request]:
+        kw = self.controller.choose() if self.controller else None
+        fn = self._gen_fn(batch.max_new_tokens, kw)
+        t0 = time.perf_counter()
+        buf, blen, stats = fn(self.params, jnp.asarray(batch.tokens),
+                              self.tables)
+        buf.block_until_ready()
+        dt = time.perf_counter() - t0
+        if self.controller:
+            self.controller.update(
+                kw, tokens=float(np.asarray(stats["tokens"]).sum()),
+                calls=float(max(np.asarray(stats["calls"]).sum(), 1)))
+        P = batch.tokens.shape[1]
+        buf = np.asarray(buf)
+        blen = np.asarray(blen)
+        for i, req in enumerate(batch.requests):
+            req.output = self.tok.decode(buf[i, P:blen[i]])
+            req.stats = {
+                "new_tokens": int(blen[i] - P),
+                "model_calls": int(np.asarray(stats["calls"])[i]),
+                "tokens_per_call": float(np.asarray(stats["tokens"])[i]
+                                         / max(1, np.asarray(
+                                             stats["calls"])[i])),
+                "wall_time_s": dt,
+            }
+        return batch.requests
+
+    def serve_all(self) -> List[Request]:
+        done: List[Request] = []
+        while True:
+            batch = self.scheduler.next_batch()
+            if batch is None:
+                return done
+            done.extend(self.run_batch(batch))

@@ -1,0 +1,20 @@
+"""Sampling policies.  The paper's method verifies *greedy* continuations
+(§Limitations: non-greedy speculative sampling is future work), so the spec
+path is greedy-only; temperature sampling is provided for the plain path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(rng, logits: jnp.ndarray,
+                       temperature: float = 1.0) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return greedy(logits)
+    return jax.random.categorical(rng, logits / temperature,
+                                  axis=-1).astype(jnp.int32)

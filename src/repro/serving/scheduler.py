@@ -1,0 +1,85 @@
+"""Request scheduling: queueing, length-bucketing, batch formation.
+
+The engine's jitted generation requires equal prompt lengths per batch (one
+prefill shape per bucket keeps recompilation bounded); the scheduler pads
+prompts up to the bucket boundary and groups by (bucket, max_new_tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..data.tokenizer import ByteTokenizer
+
+_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: str
+    max_new_tokens: int = 64
+    request_id: int = dataclasses.field(default_factory=lambda: next(_counter))
+    # filled on completion:
+    output: Optional[str] = None
+    stats: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: List[Request]
+    tokens: np.ndarray           # (B, P) int32, right-padded to bucket
+    max_new_tokens: int
+
+
+class Scheduler:
+    """FIFO with length bucketing."""
+
+    def __init__(self, max_batch: int = 8,
+                 buckets: Tuple[int, ...] = (32, 64, 128, 256, 512)):
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(buckets))
+        self.tok = ByteTokenizer()
+        self._queue: List[Tuple[Request, List[int]]] = []
+
+    def submit(self, req: Request) -> int:
+        ids = self.tok.encode(req.prompt)
+        self._queue.append((req, ids))
+        return req.request_id
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def next_batch(self) -> Optional[Batch]:
+        if not self._queue:
+            return None
+        groups: Dict[Tuple[int, int], List[Tuple[Request, List[int]]]] = \
+            defaultdict(list)
+        for req, ids in self._queue:
+            key = (self._bucket(len(ids)), req.max_new_tokens)
+            groups[key].append((req, ids))
+        # take the largest group (best batching efficiency)
+        key = max(groups, key=lambda k: len(groups[k]))
+        chosen = groups[key][:self.max_batch]
+        chosen_ids = {id(r) for r, _ in chosen}
+        self._queue = [(r, i) for r, i in self._queue
+                       if id(r) not in chosen_ids]
+        bucket, mnt = key
+        # LEFT-pad so that the last prompt token sits at position bucket-1:
+        # the jitted engine prefills a uniform length and starts generating
+        # from the final position of every row.  (Per-row pad masking inside
+        # recurrent prefill is future work; BOS-padding keeps the shift tiny.)
+        toks = np.full((len(chosen), bucket), self.tok.bos_id, np.int32)
+        for i, (_, ids) in enumerate(chosen):
+            ids = ids[-bucket:]
+            toks[i, -len(ids):] = ids
+        return Batch([r for r, _ in chosen], toks, mnt)
+
+    def pending(self) -> int:
+        return len(self._queue)

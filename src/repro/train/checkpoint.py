@@ -1,0 +1,43 @@
+"""Sharding-aware npz checkpointing (no orbax offline).
+
+Pytrees are flattened with '/'-joined key paths; arrays are gathered to host
+(fully addressable on the CPU container; on a real multi-host mesh each host
+would save its addressable shards — the path-format is stable either way).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,108 @@
+"""Training step + loop: next-token cross-entropy (+ MoE aux loss), remat,
+and the jit/pjit train_step factory used by both the CPU quickstart and the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+LOSS_CHUNK = 512        # time-chunk for the big-vocab cross entropy
+CHUNKED_LOSS_MIN_T = 2048
+
+
+def _ce_from_hidden(params, cfg, hidden, labels):
+    """Cross entropy from final hidden states, chunked over time so the
+    (B, T, vocab) f32 logits never materialise for 256k-vocab configs.
+    Each chunk is checkpointed: backward recomputes its logits."""
+    from ..models.layers import lm_logits
+    B, T, d = hidden.shape
+    if T < CHUNKED_LOSS_MIN_T or T % LOSS_CHUNK != 0:
+        logits = lm_logits(params["embed"], hidden, cfg)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return nll.mean()
+    nc = T // LOSS_CHUNK
+    h = hidden.reshape(B, nc, LOSS_CHUNK, d).swapaxes(0, 1)
+    lbl = labels.reshape(B, nc, LOSS_CHUNK).swapaxes(0, 1)
+
+    from ..distributed import act_sharding
+
+    @jax.checkpoint
+    def chunk_nll(carry, xs):
+        h_c, l_c = xs
+        logits = lm_logits(params["embed"], h_c, cfg)
+        logits = act_sharding.constrain(logits, "logits")
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, l_c[..., None], axis=-1)[..., 0]
+        return carry + nll.sum(), None
+
+    from ..models.runtime_flags import UNROLL_FOR_ANALYSIS
+    if UNROLL_FOR_ANALYSIS:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nc):
+            total, _ = chunk_nll(total, (h[i], lbl[i]))
+    else:
+        total, _ = jax.lax.scan(chunk_nll, jnp.zeros((), jnp.float32),
+                                (h, lbl))
+    return total / (B * T)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: jnp.ndarray,
+            remat: bool = False) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: (B, T+1) int32 -> (loss, metrics)."""
+    inputs, labels = batch[:, :-1], batch[:, 1:]
+    hidden, aux = M.forward_hidden(params, cfg, tokens=inputs, remat=remat)
+    loss = _ce_from_hidden(params, cfg, hidden, labels)
+    total = loss + cfg.router_aux_loss_coef * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "ppl": jnp.exp(jnp.clip(loss, 0, 20.0))}
+
+
+def encoder_loss(params, cfg: ModelConfig, embeds: jnp.ndarray,
+                 targets: jnp.ndarray, remat: bool = False):
+    """Embedding-input losses: HuBERT-style per-frame unit prediction, and
+    the VLM-backbone variant (precomputed multimodal embeddings -> token
+    targets).  Chunked CE for the big-vocab VLM case."""
+    hidden, aux = M.forward_hidden(params, cfg, embeds=embeds, remat=remat)
+    loss = _ce_from_hidden(params, cfg, hidden, targets)
+    loss = loss + cfg.router_aux_loss_coef * aux
+    return loss, {"loss": loss, "aux_loss": aux,
+                  "ppl": jnp.exp(jnp.clip(loss, 0, 20.0))}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    remat: bool = True) -> Callable:
+    """Returns train_step(train_state, batch) -> (train_state, metrics).
+
+    train_state = {"params": ..., "opt": ...}.  The same function is jit'd
+    on CPU for the quickstart and pjit'd (with shardings) by the launcher.
+    """
+    def train_step(train_state, batch):
+        if cfg.embedding_inputs:
+            embeds, targets = batch
+            grad_fn = jax.value_and_grad(
+                lambda p: encoder_loss(p, cfg, embeds, targets, remat),
+                has_aux=True)
+        else:
+            grad_fn = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, batch, remat), has_aux=True)
+        (loss, metrics), grads = grad_fn(train_state["params"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, train_state["params"], grads, train_state["opt"])
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    params = M.init_params(rng, cfg)
+    return {"params": params, "opt": init_opt_state(params)}

@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.config import BlockSpec, ModelConfig
+
+# NOTE: no XLA_FLAGS device-count override here on purpose — smoke tests and
+# benches must see the single real CPU device (the 512-device placeholder
+# mesh exists ONLY inside repro/launch/dryrun.py).
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    return ModelConfig(name="tiny", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=61,
+                       **F32).validate()
+
+
+@pytest.fixture(scope="session")
+def tiny_hybrid_cfg():
+    return ModelConfig(
+        name="tiny-hyb", num_layers=4, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=61,
+        num_experts=4, num_experts_per_tok=2,
+        block_pattern=(BlockSpec("mamba", "swiglu"), BlockSpec("mamba", "moe"),
+                       BlockSpec("attn", "swiglu"), BlockSpec("mamba", "moe")),
+        **F32).validate()
+
+
+@pytest.fixture(scope="session")
+def tiny_xlstm_cfg():
+    return ModelConfig(
+        name="tiny-xl", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=0, rope="none",
+        block_pattern=(BlockSpec("mlstm", "none"), BlockSpec("slstm", "none")),
+        **F32).validate()
+
+
+def make_params(cfg, seed=0):
+    from repro.models import model as M
+    return M.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense(tiny_dense_cfg):
+    return tiny_dense_cfg, make_params(tiny_dense_cfg)

@@ -1,0 +1,44 @@
+"""Adaptive (k, w) controller: converges to the best speedup arm."""
+import numpy as np
+
+from repro.core.controller import AdaptiveKW
+from repro.models.config import ModelConfig
+
+
+def _cfg():
+    return ModelConfig(name="c", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, vocab_size=61).validate()
+
+
+def test_controller_explores_all_arms_first():
+    c = AdaptiveKW(_cfg())
+    seen = set()
+    for _ in range(len(c.arms)):
+        a = c.choose()
+        assert a not in seen           # inf bonus forces one pull each
+        seen.add(a)
+        c.update(a, tokens=10, calls=10)
+    assert seen == set(c.arms)
+
+
+def test_controller_converges_to_best_ratio():
+    rng = np.random.default_rng(0)
+    c = AdaptiveKW(_cfg(), explore=0.05)
+    # synthetic environment: acceptance grows with w but saturates; the
+    # roofline slowdown makes huge (k,w) not worth it
+    true_tpc = {(1, 0): 1.0, (5, 4): 2.0, (10, 4): 2.2, (10, 10): 2.6,
+                (25, 2): 1.8}
+    for _ in range(300):
+        a = c.choose()
+        tok = true_tpc[a] * 10 * (1 + 0.05 * rng.standard_normal())
+        c.update(a, tokens=tok, calls=10)
+    best = c.best_exploit()
+    ratios = {a: true_tpc[a] / c.slow[a] for a in c.arms}
+    assert best == max(ratios, key=ratios.get)
+
+
+def test_controller_slowdown_prior_sane():
+    c = AdaptiveKW(_cfg())
+    assert c.slow[(1, 0)] == 1.0
+    assert c.slow[(25, 2)] >= c.slow[(5, 4)] * 0.5  # monotone-ish in cost
+    assert all(v >= 1.0 for v in c.slow.values())

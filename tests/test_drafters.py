@@ -1,0 +1,94 @@
+"""Drafters: context N-gram vs a brute-force oracle; table builders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.drafters import (bigram_draft, context_ngram_draft,
+                                 mixed_draft, unigram_draft)
+from repro.core.ngram_tables import (NGramTables, chain_from_argmax,
+                                     tables_from_counts)
+
+
+def brute_force_context(buf, cur_len, q, k, w):
+    """The paper's Appendix B.2 semantics, in plain Python."""
+    buf = list(buf[:cur_len])
+    query = buf[cur_len - q:cur_len]
+    matches = {}
+    for i in range(0, cur_len - q - w + 1):
+        if buf[i:i + q] == query:
+            cont = tuple(buf[i + q:i + q + w])
+            cnt, _ = matches.get(cont, (0, -1))
+            matches.get(cont)
+            matches[cont] = (cnt + 1, i)
+    ranked = sorted(matches.items(),
+                    key=lambda kv: (kv[1][0], kv[1][1]), reverse=True)
+    return [list(c) for c, _ in ranked[:k]]
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("q,w", [(1, 3), (2, 2), (3, 4)])
+def test_context_ngram_matches_bruteforce(seed, q, w):
+    rng = np.random.default_rng(seed)
+    L, cur, k = 64, 50, 4
+    buf = rng.integers(0, 5, size=(1, L)).astype(np.int32)  # small alphabet
+    d, v = context_ngram_draft(jnp.asarray(buf), jnp.asarray([cur]), q, k, w)
+    got = [list(np.asarray(d[0, i])) for i in range(k) if bool(v[0, i])]
+    want = brute_force_context(buf[0], cur, q, k, w)
+    assert len(got) == len(want)
+    # counts can tie across different continuations with equal recency rank:
+    # compare as ordered multisets of (count-validated) drafts
+    assert got == want
+
+
+def test_context_ngram_empty_context():
+    buf = jnp.zeros((1, 32), jnp.int32)
+    d, v = context_ngram_draft(buf, jnp.asarray([0]), 1, 4, 3)
+    assert not bool(v.any())
+
+
+def test_bigram_and_unigram_drafts():
+    counts = jnp.asarray(np.random.default_rng(0).integers(
+        0, 10, size=(13, 13)).astype(np.float32))
+    t = tables_from_counts(counts, k_max=5, w_max=6)
+    d, v = bigram_draft(t, jnp.asarray([3, 7]), k=4, w=5)
+    assert d.shape == (2, 4, 5) and bool(v.all())
+    # first column is the top-k of row x; the chain follows argmax
+    np.testing.assert_array_equal(np.asarray(d[0, :, 0]),
+                                  np.asarray(t.bigram_topk[3, :4]))
+    am = np.asarray(t.bigram_topk[:, 0])
+    for i in range(4):
+        row = np.asarray(d[0, i])
+        for j in range(1, 5):
+            assert row[j] == am[row[j - 1]]
+    du, vu = unigram_draft(t, batch=2, k=3, w=2)
+    assert du.shape == (2, 3, 2) and bool(vu.all())
+    np.testing.assert_array_equal(np.asarray(du[0, :, 0]),
+                                  np.asarray(t.unigram_topk[:3]))
+
+
+def test_chain_from_argmax():
+    am = jnp.asarray([1, 2, 0], jnp.int32)
+    chain = chain_from_argmax(am, 4)
+    np.testing.assert_array_equal(np.asarray(chain[0]), [1, 2, 0, 1])
+
+
+def test_mixed_allocation():
+    """Context drafts occupy the first rows; bigram fills the remainder."""
+    rng = np.random.default_rng(0)
+    counts = jnp.asarray(rng.integers(0, 10, size=(7, 7)).astype(np.float32))
+    t = tables_from_counts(counts, k_max=8, w_max=8)
+    # buffer with an obvious repeated pattern "1 2 3"
+    buf = jnp.asarray([[1, 2, 3, 1, 2, 3, 1, 2, 3, 1] + [0] * 22], jnp.int32)
+    cur = jnp.asarray([10], jnp.int32)
+    k, w = 4, 2
+    d, v, n_ctx = mixed_draft(t, buf, cur, buf[:, 9], q=1, k=k, w=w)
+    assert bool(v.all())
+    assert int(n_ctx[0]) >= 1
+    # the first row must be the context continuation of "... 1" -> "2 3"
+    np.testing.assert_array_equal(np.asarray(d[0, 0]), [2, 3])
+    # remaining rows are extended-bigram drafts for last token 1
+    bg, _ = bigram_draft(t, buf[:, 9], k=k, w=w)
+    nc = int(n_ctx[0])
+    np.testing.assert_array_equal(np.asarray(d[0, nc:]),
+                                  np.asarray(bg[0, :k - nc]))

@@ -1,0 +1,145 @@
+"""Model substrate: prefill/decode/verify/commit consistency across families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models.config import BlockSpec, ModelConfig
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32, vocab_size=61)
+
+FAMILIES = {
+    "dense-gqa": ModelConfig(name="d", num_layers=2, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=128, **F32),
+    "mqa-geglu": ModelConfig(name="m", num_layers=2, d_model=64, num_heads=4,
+                             num_kv_heads=1, d_ff=128, tie_embeddings=True,
+                             scale_embed=True,
+                             block_pattern=(BlockSpec("attn", "geglu"),),
+                             **F32),
+    "partial-rope-ln": ModelConfig(name="p", num_layers=2, d_model=64,
+                                   num_heads=4, num_kv_heads=4, d_ff=128,
+                                   norm="layernorm",
+                                   partial_rotary_factor=0.5,
+                                   block_pattern=(BlockSpec("attn", "relu2"),),
+                                   **F32),
+    "mrope": ModelConfig(name="q", num_layers=2, d_model=64, num_heads=4,
+                         num_kv_heads=2, d_ff=128, rope="mrope",
+                         mrope_sections=(4, 2, 2), **F32),
+    "swa": ModelConfig(name="s", num_layers=2, d_model=64, num_heads=4,
+                       num_kv_heads=2, d_ff=128, sliding_window=8, **F32),
+    "mamba": ModelConfig(name="mb", num_layers=2, d_model=64, num_heads=4,
+                         num_kv_heads=4, d_ff=128, rope="none",
+                         block_pattern=(BlockSpec("mamba", "swiglu"),), **F32),
+    "hybrid-moe": ModelConfig(
+        name="h", num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, num_experts=4, num_experts_per_tok=2,
+        block_pattern=(BlockSpec("mamba", "swiglu"), BlockSpec("mamba", "moe"),
+                       BlockSpec("attn", "swiglu"), BlockSpec("mamba", "moe")),
+        **F32),
+    "xlstm": ModelConfig(name="x", num_layers=2, d_model=64, num_heads=4,
+                         num_kv_heads=4, d_ff=0, rope="none",
+                         block_pattern=(BlockSpec("mlstm", "none"),
+                                        BlockSpec("slstm", "none")), **F32),
+    "deepseek": ModelConfig(name="ds", num_layers=3, d_model=64, num_heads=4,
+                            num_kv_heads=4, d_ff=128, moe_d_ff=32,
+                            num_experts=4, num_experts_per_tok=2,
+                            num_shared_experts=1,
+                            prefix_blocks=(BlockSpec("attn", "swiglu"),),
+                            block_pattern=(BlockSpec("attn", "moe"),), **F32),
+}
+
+
+@pytest.mark.parametrize("family", list(FAMILIES))
+def test_prefill_decode_verify_commit(family):
+    cfg = FAMILIES[family].validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    full, _ = M.forward(params, cfg, tokens=toks)
+    assert bool(jnp.isfinite(full).all())
+
+    state = M.init_state(cfg, B, 48)
+    _, state = M.prefill(params, cfg, state, tokens=toks[:, :12])
+    ld, state = M.decode(params, cfg, state, toks[:, 12:])
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full[:, 12:]),
+                               rtol=5e-4, atol=5e-4)
+
+    k, w1 = 3, 4
+    vt = jnp.broadcast_to(toks[:, 12:12 + w1][:, None], (B, k, w1))
+    st2 = M.init_state(cfg, B, 48)
+    _, st2 = M.prefill(params, cfg, st2, tokens=toks[:, :12])
+    vl, tails = M.verify(params, cfg, st2, vt)
+    np.testing.assert_allclose(np.asarray(vl[:, 0]),
+                               np.asarray(full[:, 12:12 + w1]),
+                               rtol=5e-4, atol=5e-4)
+
+    # partial replay commit then continue
+    ncommit = jnp.full((B,), 2, jnp.int32)
+    _, st2 = M.decode(params, cfg, st2, vt[:, 0], n_commit=ncommit)
+    assert int(st2["cur_len"][0]) == 14
+    ld3, _ = M.decode(params, cfg, st2, toks[:, 14:15])
+    np.testing.assert_allclose(np.asarray(ld3), np.asarray(full[:, 14:15]),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_commit_kv_tails_matches_replay(tiny_dense):
+    cfg, params = tiny_dense
+    B, T, k, w1 = 2, 12, 3, 4
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T + w1 + 1), 0,
+                              cfg.vocab_size)
+    vt = jnp.broadcast_to(toks[:, T:T + w1][:, None], (B, k, w1))
+    sA = M.init_state(cfg, B, 48)
+    _, sA = M.prefill(params, cfg, sA, tokens=toks[:, :T])
+    _, tails = M.verify(params, cfg, sA, vt)
+    n = jnp.full((B,), 3, jnp.int32)
+    sA = M.commit_kv_tails(cfg, sA, tails, jnp.zeros((B,), jnp.int32), n)
+    sB = M.init_state(cfg, B, 48)
+    _, sB = M.prefill(params, cfg, sB, tokens=toks[:, :T])
+    _, sB = M.decode(params, cfg, sB, vt[:, 0], n_commit=n)
+    nxt = toks[:, T + 3:T + 4]
+    lA, _ = M.decode(params, cfg, sA, nxt)
+    lB, _ = M.decode(params, cfg, sB, nxt)
+    np.testing.assert_allclose(np.asarray(lA), np.asarray(lB),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_encoder_only_forward():
+    cfg = ModelConfig(name="enc", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=4, d_ff=128, causal=False,
+                      encoder_only=True, embedding_inputs=True, rope="none",
+                      block_pattern=(BlockSpec("attn", "gelu"),),
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                      vocab_size=32).validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64))
+    logits, _ = M.forward(params, cfg, embeds=x)
+    assert logits.shape == (2, 10, 32)
+    assert bool(jnp.isfinite(logits).all())
+    # bidirectional: flipping the sequence flips the outputs
+    logits2, _ = M.forward(params, cfg, embeds=x[:, ::-1])
+    np.testing.assert_allclose(np.asarray(logits2[:, ::-1]),
+                               np.asarray(logits), rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_attention_matches_dense():
+    """Flash-style blockwise path == exact softmax attention."""
+    import repro.models.attention as A
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="bw", num_layers=1, d_model=32, num_heads=4,
+                      num_kv_heads=2, d_ff=64, vocab_size=11,
+                      param_dtype=jnp.float32, compute_dtype=jnp.float32,
+                      sliding_window=24).validate()
+    B, T, H, hd, KV = 2, 32, 4, 8, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, KV, hd))
+    v = jax.random.normal(ks[2], (B, T, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    kpos = jnp.where(pos < 30, pos, -1)     # padding mask exercised
+    dense = A.masked_attention(q, k, v, pos, kpos, cfg, causal=True)
+    bw = A._blockwise_attention(q, k, v, pos, kpos, cfg, causal=True,
+                                block=8)
+    np.testing.assert_allclose(np.asarray(bw), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)

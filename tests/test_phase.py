@@ -1,0 +1,53 @@
+"""Roofline phase model (paper §3 / Fig. 1 analogue) sanity tests."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.phase import (CallCost, expected_speedup, slowdown,
+                              verify_call_cost)
+
+
+@pytest.fixture(scope="module")
+def mistral():
+    return get_config("mistral-7b")
+
+
+def test_decode_call_is_memory_bound(mistral):
+    c = verify_call_cost(mistral, ell=512, k=1, w=0)
+    assert not c.compute_bound          # classic 1-token decode
+
+
+def test_slowdown_monotone_in_k_and_w(mistral):
+    base = slowdown(mistral, 500, 1, 0)
+    assert base == pytest.approx(1.0)
+    s_small = slowdown(mistral, 500, 5, 4)
+    s_big = slowdown(mistral, 500, 25, 14)
+    assert 1.0 <= s_small <= s_big
+
+
+def test_free_region_exists(mistral):
+    """Small (k,w) must be ~free while memory-bound (the paper's premise)."""
+    assert slowdown(mistral, 500, 2, 1) < 1.2
+
+
+def test_compute_bound_transition(mistral):
+    """Large enough (k,w) must eventually slow the call down (Fig. 1)."""
+    assert slowdown(mistral, 25, 32, 15) > 1.5
+
+
+def test_shared_cache_beats_paper_layout_at_long_context(mistral):
+    """Bifurcated shared-cache layout (ours) vs replicated (paper):
+    at long context the k× cache re-read must cost real time."""
+    s_shared = slowdown(mistral, 32768, 10, 10, shared_cache=True)
+    s_paper = slowdown(mistral, 32768, 10, 10, shared_cache=False)
+    assert s_paper > s_shared * 1.2
+
+
+def test_expected_speedup_combines(mistral):
+    sp = expected_speedup(mistral, 500, 10, 10, tokens_per_call=2.2)
+    assert 0.5 < sp <= 2.2
+
+
+def test_callcost_algebra():
+    a = CallCost(10.0, 4.0)
+    b = a * 2 + a
+    assert b.flops == 30.0 and b.hbm_bytes == 12.0

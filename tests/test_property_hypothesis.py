@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.drafters import context_ngram_draft
+from repro.core.verify import accept
+
+SETTINGS = dict(max_examples=30, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 5),
+       st.integers(2, 6))
+@settings(**SETTINGS)
+def test_accept_invariants(seed, k, w, vocab):
+    """For ANY drafts/greedy: 1 <= n_commit <= w+1; committed tokens are a
+    prefix of the winner's greedy sequence semantics."""
+    rng = np.random.default_rng(seed)
+    drafts = jnp.asarray(rng.integers(0, vocab, (1, k, w)), jnp.int32)
+    greedy = jnp.asarray(rng.integers(0, vocab, (1, k, w + 1)), jnp.int32)
+    a = accept(drafts, greedy)
+    n = int(a.n_commit[0])
+    assert 1 <= n <= w + 1
+    wi = int(a.winner[0])
+    # all rows' n_acc <= winner's
+    assert int(a.n_acc[0].max()) == int(a.n_acc[0, wi])
+    # committed tokens: first n-1 equal the winner's draft prefix,
+    # last equals greedy after that prefix
+    toks = np.asarray(a.tokens[0, :n])
+    np.testing.assert_array_equal(toks[:n - 1],
+                                  np.asarray(drafts[0, wi, :n - 1]))
+    assert toks[n - 1] == int(greedy[0, wi, n - 1])
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 4))
+@settings(**SETTINGS)
+def test_context_drafts_exist_in_context(seed, q, w, k):
+    """Every valid context draft must literally follow a query match in the
+    committed context (no hallucinated drafts; hash collisions only ever
+    merge counts, never invent continuations)."""
+    rng = np.random.default_rng(seed)
+    L = 48
+    cur = int(rng.integers(q + 1, L))
+    buf = rng.integers(0, 4, L).astype(np.int32)
+    d, v = context_ngram_draft(jnp.asarray(buf[None]),
+                               jnp.asarray([cur]), q, k, w)
+    query = list(buf[cur - q:cur])
+    continuations = set()
+    for i in range(0, cur - q - w + 1):
+        if list(buf[i:i + q]) == query:
+            continuations.add(tuple(buf[i + q:i + q + w]))
+    for i in range(k):
+        if bool(v[0, i]):
+            assert tuple(np.asarray(d[0, i])) in continuations
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_spec_equals_greedy_random_models(seed):
+    """The paper's core guarantee, for random tiny models and prompts."""
+    from repro.core.ngram_tables import NGramTables, tables_from_counts
+    from repro.core.spec_engine import SpecConfig, generate, greedy_reference
+    from repro.models import model as M
+    from repro.models.config import ModelConfig
+    rng = np.random.default_rng(seed)
+    cfg = ModelConfig(name="t", num_layers=int(rng.integers(1, 3)),
+                      d_model=32, num_heads=2,
+                      num_kv_heads=int(rng.choice([1, 2])), d_ff=64,
+                      vocab_size=int(rng.integers(17, 41)),
+                      param_dtype=jnp.float32,
+                      compute_dtype=jnp.float32).validate()
+    params = M.init_params(jax.random.PRNGKey(seed % 1000), cfg)
+    # arbitrary (even mismatched) tables: correctness cannot depend on them
+    counts = jnp.asarray(rng.random((cfg.vocab_size, cfg.vocab_size)),
+                         jnp.float32)
+    tables = tables_from_counts(counts, k_max=4, w_max=4)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)), jnp.int32)
+    N = 10
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=int(rng.integers(1, 4)), w=int(rng.integers(1, 4)),
+                      strategy="mixed", max_new_tokens=N)
+    buf, _, _ = generate(params, cfg, spec, prompt, tables)
+    np.testing.assert_array_equal(np.asarray(buf[:, :6 + N]),
+                                  np.asarray(ref))

@@ -1,0 +1,72 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each arch instantiates its REDUCED family variant (<=2 layers, d_model<=512,
+<=4 experts) and runs one forward + one train step + (decoders) one
+speculative serve step on CPU, asserting shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.models import model as M
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    ts = init_train_state(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 16
+    if cfg.embedding_inputs:
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+        logits, _ = M.forward(ts["params"], cfg, embeds=x)
+        assert logits.shape == (B, T, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        targets = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                     cfg.vocab_size)
+        step = make_train_step(cfg, AdamWConfig(total_steps=2), remat=False)
+        ts2, metrics = jax.jit(step)(ts, (x, targets))
+        assert bool(jnp.isfinite(metrics["loss"]))
+        return
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T + 1), 0,
+                              cfg.vocab_size)
+    logits, _ = M.forward(ts["params"], cfg, tokens=toks[:, :-1])
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    step = make_train_step(cfg, AdamWConfig(total_steps=2), remat=False)
+    ts2, metrics = jax.jit(step)(ts, toks)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(ts["params"])[0]
+    l1 = jax.tree_util.tree_leaves(ts2["params"])[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if not get_smoke_config(a).encoder_only])
+def test_smoke_spec_serve_step(arch):
+    """One prefill + one batched (k, w+1) verification + commit."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, P, k, w1 = 2, 8, 3, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                              cfg.vocab_size)
+    state = M.init_state(cfg, B, 32)
+    logits, state = M.prefill(params, cfg, state, tokens=toks)
+    assert bool(jnp.isfinite(logits).all())
+    rows = jax.random.randint(jax.random.PRNGKey(2), (B, k, w1), 0,
+                              cfg.vocab_size)
+    vlogits, tails = M.verify(params, cfg, state, rows)
+    assert vlogits.shape == (B, k, w1, cfg.vocab_size)
+    assert bool(jnp.isfinite(vlogits).all())
+    n = jnp.full((B,), 2, jnp.int32)
+    if M.has_recurrent(cfg):
+        _, state = M.decode(params, cfg, state, rows[:, 0], n_commit=n)
+    else:
+        state = M.commit_kv_tails(cfg, state, tails,
+                                  jnp.zeros((B,), jnp.int32), n)
+    assert int(state["cur_len"][0]) == P + 2

@@ -1,0 +1,94 @@
+"""THE paper invariant: speculative output == greedy output, always."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ngram_tables import (NGramTables, build_bigram, build_unigram)
+from repro.core.spec_engine import SpecConfig, generate, greedy_reference
+from repro.models import model as M
+
+
+def _tables(params, cfg, k_max=8, w_max=8):
+    fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+    topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=k_max, w_max=w_max,
+                               batch=cfg.vocab_size)
+    uni = build_unigram(params["embed"]["embedding"],
+                        params["embed"]["lm_head"], k_max=k_max)
+    return NGramTables(uni, topk, chain)
+
+
+@pytest.mark.parametrize("strategy", ["greedy", "bigram", "unigram",
+                                      "context", "mixed"])
+def test_spec_equals_greedy_dense(tiny_dense, strategy):
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 2, 10, 24
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=4, w=3, q=1, strategy=strategy, max_new_tokens=N)
+    buf, blen, stats = generate(params, cfg, spec, prompt, tables)
+    for b in range(B):
+        np.testing.assert_array_equal(np.asarray(buf[b, :P + N]),
+                                      np.asarray(ref[b]))
+    assert (np.asarray(blen) == P + N).all()
+    assert (np.asarray(stats["tokens"]) == N).all()
+
+
+@pytest.mark.parametrize("kw", [(1, 1), (2, 5), (8, 2)])
+def test_spec_equals_greedy_kw_grid(tiny_dense, kw):
+    cfg, params = tiny_dense
+    k, w = kw
+    tables = _tables(params, cfg, k_max=max(8, k), w_max=max(8, w))
+    B, P, N = 2, 6, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=k, w=w, strategy="mixed", max_new_tokens=N)
+    buf, _, _ = generate(params, cfg, spec, prompt, tables)
+    np.testing.assert_array_equal(np.asarray(buf[:, :P + N]), np.asarray(ref))
+
+
+def test_spec_equals_greedy_recurrent(tiny_hybrid_cfg):
+    cfg = tiny_hybrid_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tables = _tables(params, cfg)
+    B, P, N = 2, 8, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=3, w=3, strategy="mixed", max_new_tokens=N)
+    buf, _, _ = generate(params, cfg, spec, prompt, tables)
+    np.testing.assert_array_equal(np.asarray(buf[:, :P + N]), np.asarray(ref))
+
+
+def test_eos_stops_generation(tiny_dense):
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 1, 8, 32
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)[0, P:]
+    eos = int(ref[5])  # force an eos hit mid-stream
+    spec = SpecConfig(k=4, w=3, strategy="mixed", max_new_tokens=N,
+                      eos_id=eos)
+    buf, blen, _ = generate(params, cfg, spec, prompt, tables)
+    out = np.asarray(buf[0, P:int(blen[0])])
+    first = list(np.asarray(ref)).index(eos)
+    np.testing.assert_array_equal(out, np.asarray(ref[:first + 1]))
+    assert out[-1] == eos
+
+
+def test_tokens_per_call_reporting(tiny_dense):
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (1, 8), 0,
+                                cfg.vocab_size)
+    spec = SpecConfig(k=4, w=4, strategy="mixed", max_new_tokens=20)
+    _, _, stats = generate(params, cfg, spec, prompt, tables)
+    calls = int(stats["calls"][0])
+    tokens = int(stats["tokens"][0])
+    assert tokens == 20
+    assert 1 <= calls <= 20
+    assert int(stats["accept_hist"][0].sum()) == calls

@@ -1,0 +1,50 @@
+"""Acceptance-rule unit tests (paper §4.1 batched guess-and-verify)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.verify import accept
+
+
+def test_accept_basic():
+    # k=2, w=3. Row 0 matches 2 drafts, row 1 matches 0.
+    drafts = jnp.asarray([[[5, 6, 7], [9, 9, 9]]])
+    greedy = jnp.asarray([[[5, 6, 8, 4], [5, 1, 2, 3]]])
+    a = accept(drafts, greedy)
+    assert int(a.winner[0]) == 0
+    assert int(a.n_commit[0]) == 3           # 2 accepted + bonus
+    np.testing.assert_array_equal(np.asarray(a.tokens[0, :3]), [5, 6, 8])
+
+
+def test_accept_no_match_gives_bonus():
+    drafts = jnp.asarray([[[3, 3], [4, 4]]])
+    greedy = jnp.asarray([[[7, 1, 2], [7, 5, 6]]])
+    a = accept(drafts, greedy)
+    assert int(a.n_commit[0]) == 1
+    assert int(a.tokens[0, 0]) == 7          # the model's own next token
+
+
+def test_accept_full_match():
+    drafts = jnp.asarray([[[1, 2, 3]]])
+    greedy = jnp.asarray([[[1, 2, 3, 4]]])
+    a = accept(drafts, greedy)
+    assert int(a.n_commit[0]) == 4
+    np.testing.assert_array_equal(np.asarray(a.tokens[0]), [1, 2, 3, 4])
+
+
+def test_accept_tie_prefers_lower_row():
+    """Ties -> first row (context drafts sit first under the mixed strategy)."""
+    drafts = jnp.asarray([[[1, 9], [1, 8]]])
+    greedy = jnp.asarray([[[1, 5, 0], [1, 5, 0]]])
+    a = accept(drafts, greedy)
+    assert int(a.winner[0]) == 0
+    assert int(a.n_commit[0]) == 2
+    np.testing.assert_array_equal(np.asarray(a.tokens[0, :2]), [1, 5])
+
+
+def test_accept_interior_restart_not_counted():
+    """A draft matching again AFTER a mismatch must not count (prefix only)."""
+    drafts = jnp.asarray([[[1, 9, 3]]])
+    greedy = jnp.asarray([[[1, 2, 3, 4]]])
+    a = accept(drafts, greedy)
+    assert int(a.n_commit[0]) == 2           # 1 accepted + bonus(2)
+    np.testing.assert_array_equal(np.asarray(a.tokens[0, :2]), [1, 2])
