@@ -1,0 +1,170 @@
+"""Continuous vs static batching under Poisson arrivals.
+
+Requests arrive as a Poisson process (seeded, so runs are comparable) with
+heterogeneous max_new_tokens; both serving modes run the same mixed-strategy
+speculation.  Static batching admits work only when the scheduler forms a
+batch and every row then rides until the slowest row finishes; continuous
+batching admits/retires between jitted spec_steps.  Reported per mode:
+
+  - throughput_tok_s : committed new tokens / busy wall time
+  - p50/p99 latency  : submit -> completion per request (seconds)
+
+Writes ``BENCH_continuous.json`` (repo root) so future PRs can track serving
+throughput, and prints one CSV row per mode.
+
+Run:  PYTHONPATH=src python -m benchmarks.continuous_batching [--n 24]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.spec_engine import SpecConfig
+from repro.data.datasets import make_prompts
+from repro.serving import ServingEngine
+
+from .common import get_tables, get_trained, ensure_dirs
+
+BUCKETS = (64,)
+MAX_NEW_CHOICES = (16, 32, 48)
+
+
+def make_workload(n: int, rate_hz: float, seed: int = 0
+                  ) -> List[Tuple[str, int, float]]:
+    """(prompt, max_new_tokens, arrival_time_s) sorted by arrival."""
+    rng = np.random.default_rng(seed)
+    texts = [p for p, _ in make_prompts("code", (n + 1) // 2, seed=1)]
+    texts += [p for p, _ in make_prompts("math", n - len(texts), seed=2)]
+    gaps = rng.exponential(1.0 / rate_hz, n)
+    arrivals = np.cumsum(gaps)
+    return [(texts[i], int(rng.choice(MAX_NEW_CHOICES)), float(arrivals[i]))
+            for i in range(n)]
+
+
+def _summary(lat: Dict[int, float], toks: int, busy_s: float) -> Dict:
+    ls = np.asarray(sorted(lat.values()))
+    return {"requests": len(ls),
+            "new_tokens": toks,
+            "busy_wall_s": round(busy_s, 3),
+            "throughput_tok_s": round(toks / max(busy_s, 1e-9), 2),
+            "p50_latency_s": round(float(np.percentile(ls, 50)), 4),
+            "p99_latency_s": round(float(np.percentile(ls, 99)), 4)}
+
+
+def run_static(eng, workload) -> Dict:
+    """Replay arrivals against static batching: whenever requests are queued,
+    form the next batch and run it to completion (the queue keeps growing
+    while the monolithic generate blocks)."""
+    pending = list(workload)
+    arrival: Dict[int, float] = {}
+    latency: Dict[int, float] = {}
+    toks = 0
+    busy = 0.0
+    t0 = time.perf_counter()
+    while pending or eng.scheduler.pending():
+        now = time.perf_counter() - t0
+        while pending and pending[0][2] <= now:
+            text, mnt, at = pending.pop(0)
+            arrival[eng.submit(text, max_new_tokens=mnt).request_id] = at
+        batch = eng.scheduler.next_batch()
+        if batch is None:
+            # nothing runnable yet: jump to the next arrival
+            time.sleep(min(0.001, max(pending[0][2] - now, 0.0)))
+            continue
+        tb = time.perf_counter()
+        reqs = eng.run_batch(batch)
+        busy += time.perf_counter() - tb
+        done_t = time.perf_counter() - t0
+        for r in reqs:
+            latency[r.request_id] = done_t - arrival[r.request_id]
+            toks += r.stats["new_tokens"]
+    return _summary(latency, toks, busy)
+
+
+def run_continuous(eng, workload) -> Dict:
+    pending = list(workload)
+    arrival: Dict[int, float] = {}
+    latency: Dict[int, float] = {}
+    toks = 0
+    busy = 0.0
+    t0 = time.perf_counter()
+    while pending or eng.scheduler.pending() or eng.in_flight():
+        now = time.perf_counter() - t0
+        while pending and pending[0][2] <= now:
+            text, mnt, at = pending.pop(0)
+            arrival[eng.submit(text, max_new_tokens=mnt).request_id] = at
+        if not (eng.scheduler.pending() or eng.in_flight()):
+            time.sleep(min(0.001, max(pending[0][2] - now, 0.0)))
+            continue
+        tb = time.perf_counter()
+        retired = eng.step()
+        busy += time.perf_counter() - tb
+        done_t = time.perf_counter() - t0
+        for r in retired:
+            latency[r.request_id] = done_t - arrival[r.request_id]
+            toks += r.stats["new_tokens"]
+    return _summary(latency, toks, busy)
+
+
+def run(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
+        seed: int = 0) -> Dict:
+    ensure_dirs()
+    cfg, params = get_trained()
+    tables = get_tables(cfg, params, k_max=16, w_max=10)
+    spec = SpecConfig(k=8, w=8, strategy="mixed",
+                      max_new_tokens=max(MAX_NEW_CHOICES))
+
+    def make_engine():
+        return ServingEngine(params, cfg, spec, tables=tables,
+                             max_batch=max_batch, buckets=BUCKETS,
+                             max_new_cap=max(MAX_NEW_CHOICES))
+
+    # warm the jit caches of the engines we measure, out of the timed region
+    # (generate is compiled per (engine, max_new); spec_step/admit_slot are
+    # module-level and compile once per shape)
+    # static generate compiles per (batch_size, max_new): warm every combo
+    # the replay can produce, else compile time pollutes the busy window
+    eng_static = make_engine()
+    for mnt in MAX_NEW_CHOICES:
+        for b in range(1, max_batch + 1):
+            for _ in range(b):
+                eng_static.submit("warmup", max_new_tokens=mnt)
+            eng_static.serve_all()
+    eng_cont = make_engine()
+    eng_cont.submit("warmup", max_new_tokens=min(MAX_NEW_CHOICES))
+    eng_cont.serve_continuous()
+
+    workload = make_workload(n, rate_hz, seed)
+    res = {"workload": {"n": n, "rate_hz": rate_hz, "seed": seed,
+                        "max_batch": max_batch, "buckets": list(BUCKETS),
+                        "spec": {"k": spec.k, "w": spec.w,
+                                 "strategy": spec.strategy}},
+           "static": run_static(eng_static, workload),
+           "continuous": run_continuous(eng_cont, workload)}
+    with open("BENCH_continuous.json", "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    res = run(args.n, args.rate, args.max_batch, args.seed)
+    print("mode,throughput_tok_s,p50_latency_s,p99_latency_s")
+    for mode in ("static", "continuous"):
+        r = res[mode]
+        print(f"{mode},{r['throughput_tok_s']},{r['p50_latency_s']},"
+              f"{r['p99_latency_s']}")
+    print("wrote BENCH_continuous.json")
+
+
+if __name__ == "__main__":
+    main()

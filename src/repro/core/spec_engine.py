@@ -1,15 +1,25 @@
 """The speculative generation engine: draft -> verify -> accept -> commit.
 
-Unlike the paper's Python decode loop, the whole generation is ONE jitted
-``lax.while_loop`` with fixed shapes (a requirement for TPU serving): the
-token buffer is static-length, per-sequence progress is tracked by
-``cur_len``, and finished rows simply commit 0 tokens.
+The unit of work is ONE jitted iteration, ``spec_step``: it drafts, runs the
+batched verification call, and commits the winning tokens for every *active*
+slot of a persistent ``DecodeState`` pytree.  Everything is fixed-shape (a
+requirement for TPU serving): the token buffer is static-length, per-sequence
+progress is tracked by ``buf_len``, and inactive/finished rows simply commit
+0 tokens.
+
+``generate`` (the one-shot path) is a thin ``lax.while_loop`` over the same
+step body, so batch-at-once generation and step-driven serving are literally
+the same computation — the bit-exact-vs-greedy guarantee (property-tested)
+transfers to both.  Step-driven serving additionally gets ``admit_slot`` /
+``release_slot`` so a continuous-batching engine can retire finished rows and
+prefill a queued prompt into the freed slot *between* verify calls
+(serving/engine.py builds on exactly this).
 
 Invariants:
   - output is bit-identical to greedy decoding (property-tested);
-  - state.cur_len == #cached positions == buf_len - 1 (the last committed
-    token's KV is materialised by the *next* call, exactly as in the paper's
-    Appendix D cache).
+  - per row: model.cur_len == #cached positions == buf_len - 1 (the last
+    committed token's KV is materialised by the *next* call, exactly as in
+    the paper's Appendix D cache).
 
 Commit paths:
   - attention-only archs: write the winner's verified KV tail (no extra
@@ -19,16 +29,19 @@ Commit paths:
 
 Statistics mirror the paper's ablations (Fig. 4): acceptance-length
 histogram, winning-rank histogram, context/bigram allocation and
-per-strategy accepted tokens.
+per-strategy accepted tokens.  Stats are per-slot; ``admit_slot`` zeroes a
+slot's row so a continuous engine reads them per-request at retirement.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..models import cache as C
 from ..models import model as M
 from ..models.config import ModelConfig
 from .drafters import (bigram_draft, context_ngram_draft, mixed_draft,
@@ -45,6 +58,40 @@ class SpecConfig:
     strategy: str = "mixed"     # mixed | bigram | unigram | context | greedy
     max_new_tokens: int = 64
     eos_id: int = -1            # -1: never stop on eos
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["buf", "buf_len", "prompt_len", "budget", "eos_id", "done",
+                 "active", "model", "stats"],
+    meta_fields=[])
+@dataclasses.dataclass
+class DecodeState:
+    """Persistent decoding state: one row ("slot") per in-flight sequence.
+
+    A slot is *occupied* while ``active``; ``done`` marks rows that must not
+    commit further tokens (finished, or empty slot).  ``eos_id == -1`` means
+    the row never stops on eos.  All leaves are fixed-shape so the state can
+    thread through ``lax.while_loop`` and a jit-compiled ``spec_step``
+    without recompilation as requests come and go.
+    """
+    buf: jnp.ndarray         # (B, L) int32 token buffer (prompt + output)
+    buf_len: jnp.ndarray     # (B,) int32 committed length per row
+    prompt_len: jnp.ndarray  # (B,) int32
+    budget: jnp.ndarray      # (B,) int32 per-row max_new_tokens
+    eos_id: jnp.ndarray      # (B,) int32 per-row eos (-1: never)
+    done: jnp.ndarray        # (B,) bool
+    active: jnp.ndarray      # (B,) bool — slot currently occupied
+    model: Dict[str, Any]    # models/cache.py state {"cur_len", "groups"}
+    stats: Dict[str, jnp.ndarray]
+
+    @property
+    def num_slots(self) -> int:
+        return self.buf.shape[0]
+
+    @property
+    def buf_size(self) -> int:
+        return self.buf.shape[1]
 
 
 def _draft(spec: SpecConfig, tables: NGramTables, buf, buf_len, last):
@@ -76,116 +123,261 @@ def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
     }
 
 
-def generate(params, cfg: ModelConfig, spec: SpecConfig,
-             prompt: jnp.ndarray, tables: Optional[NGramTables] = None
-             ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Generate up to max_new_tokens for every row of ``prompt`` (B, P).
+# ---------------------------------------------------------------------------
+# state construction / slot admission
+# ---------------------------------------------------------------------------
+def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
+                       buf_size: int) -> DecodeState:
+    """All-slots-free state for a continuous-batching engine."""
+    B = num_slots
+    return DecodeState(
+        buf=jnp.zeros((B, buf_size), jnp.int32),
+        buf_len=jnp.zeros((B,), jnp.int32),
+        prompt_len=jnp.zeros((B,), jnp.int32),
+        budget=jnp.zeros((B,), jnp.int32),
+        eos_id=jnp.full((B,), -1, jnp.int32),
+        done=jnp.ones((B,), bool),
+        active=jnp.zeros((B,), bool),
+        model=M.init_state(cfg, B, buf_size),
+        stats=_init_stats(spec, B))
 
-    Returns (buf (B, L), buf_len (B,), stats).  jit-compatible end to end.
+
+def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
+                      prompt: jnp.ndarray,
+                      max_new_tokens: Optional[jnp.ndarray] = None,
+                      eos_id: Optional[jnp.ndarray] = None,
+                      buf_size: Optional[int] = None) -> DecodeState:
+    """Prefill every row of ``prompt`` (B, P) into a fresh DecodeState.
+
+    The static buffer is sized by spec.max_new_tokens (grown to cover
+    concrete per-row ``max_new_tokens``; traced budgets must not exceed
+    spec.max_new_tokens) unless ``buf_size`` is given.
     """
     B, P = prompt.shape
-    L = P + spec.max_new_tokens + spec.w + 2
-    max_cache = L
-    state = M.init_state(cfg, B, max_cache)
+    budget = (jnp.full((B,), spec.max_new_tokens, jnp.int32)
+              if max_new_tokens is None
+              else jnp.broadcast_to(jnp.asarray(max_new_tokens, jnp.int32),
+                                    (B,)))
+    cap = spec.max_new_tokens
+    if max_new_tokens is not None:
+        try:
+            cap = max(cap, int(jnp.max(budget)))
+        except (jax.errors.ConcretizationTypeError,
+                jax.errors.TracerArrayConversionError):
+            pass  # traced budgets: caller promises <= spec.max_new_tokens
+    L = buf_size or P + cap + spec.w + 2
+    eos = (jnp.full((B,), spec.eos_id, jnp.int32) if eos_id is None
+           else jnp.broadcast_to(jnp.asarray(eos_id, jnp.int32), (B,)))
+    model = M.init_state(cfg, B, L)
     buf = jnp.zeros((B, L), jnp.int32)
     buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
 
-    logits_p, state = M.prefill(params, cfg, state, tokens=prompt)
-    first = jnp.argmax(logits_p[:, -1], axis=-1).astype(jnp.int32)   # free token
+    logits_p, model = M.prefill(params, cfg, model, tokens=prompt)
+    first = jnp.argmax(logits_p[:, -1], axis=-1).astype(jnp.int32)  # free token
     buf = buf.at[:, P].set(first)
-    buf_len = jnp.full((B,), P + 1, jnp.int32)
     stats = _init_stats(spec, B)
     stats["tokens"] = stats["tokens"] + 1
-    done = (first == spec.eos_id) if spec.eos_id >= 0 else jnp.zeros((B,), bool)
+    return DecodeState(
+        buf=buf,
+        buf_len=jnp.full((B,), P + 1, jnp.int32),
+        prompt_len=jnp.full((B,), P, jnp.int32),
+        budget=budget,
+        eos_id=eos,
+        done=(first == eos) & (eos >= 0),
+        active=jnp.ones((B,), bool),
+        model=model,
+        stats=stats)
 
-    attn_only = not M.has_recurrent(cfg)
 
-    def cond(carry):
-        _, buf_len_c, done_c, *_ = carry
-        return (~done_c).any() & (buf_len_c - P < spec.max_new_tokens).any()
+@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(2,))
+def admit_slot(params, cfg: ModelConfig, state: DecodeState,
+               slot: jnp.ndarray, prompt: jnp.ndarray,
+               max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray
+               ) -> DecodeState:
+    """Prefill ``prompt`` (P,) into slot ``slot`` of a shared DecodeState.
 
-    def spec_body(carry):
-        buf_c, len_c, done_c, state_c, st = carry
-        last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)[:, 0]
-        drafts, valid, n_ctx = _draft(spec, tables, buf_c, len_c, last)
-        rows = jnp.concatenate(
-            [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
-            axis=-1)                                                # (B,k,w+1)
-        logits, tails = M.verify(params, cfg, state_c, rows)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        acc = accept(drafts, greedy)
-        active = (~done_c) & (len_c - P < spec.max_new_tokens)
-        budget = jnp.maximum(P + spec.max_new_tokens - len_c, 0)
-        n_commit = jnp.where(active, jnp.minimum(acc.n_commit, budget), 0)
-        # eos truncation: commit only up to (and including) the first eos
-        if spec.eos_id >= 0:
-            iseos = acc.tokens == spec.eos_id
-            first_eos = jnp.argmax(iseos, axis=1)
-            has_eos = iseos.any(axis=1) & (first_eos < n_commit)
-            n_commit = jnp.where(has_eos, first_eos + 1, n_commit)
-            done_c = done_c | (has_eos & active)
-        # commit the model state
-        if attn_only:
-            state_n = M.commit_kv_tails(cfg, state_c, tails, acc.winner,
-                                        n_commit)
-        else:
-            row_tok = jnp.take_along_axis(
-                rows, acc.winner[:, None, None], axis=1)[:, 0]      # (B,w+1)
-            _, state_n = M.decode(params, cfg, state_c, row_tok,
-                                  n_commit=n_commit)
-        # write accepted tokens into the buffer
-        pos = jnp.arange(spec.w + 1)[None, :]
-        slots = jnp.clip(len_c[:, None] + pos, 0, L - 1)
-        gate = pos < n_commit[:, None]
-        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], slots.shape)
-        old = buf_c[b_idx, slots]
-        buf_n = buf_c.at[b_idx, slots].set(
-            jnp.where(gate, acc.tokens, old))
-        len_n = len_c + n_commit
-        done_n = done_c | (len_n - P >= spec.max_new_tokens)
-        # ---- stats ----
-        st = dict(st)
-        st["calls"] = st["calls"] + active.astype(jnp.int32)
-        st["tokens"] = st["tokens"] + n_commit
-        st["accept_hist"] = st["accept_hist"].at[
-            jnp.arange(B), jnp.clip(n_commit, 0, spec.w + 1)].add(
-                active.astype(jnp.int32))
-        n_win = jnp.take_along_axis(acc.n_acc, acc.winner[:, None], 1)[:, 0]
-        st["rank_hist"] = st["rank_hist"].at[jnp.arange(B), acc.winner].add(
-            (active & (n_win > 0)).astype(jnp.int32))
-        st["alloc_ctx"] = st["alloc_ctx"].at[
-            jnp.arange(B), jnp.clip(n_ctx, 0, spec.k)].add(
-                active.astype(jnp.int32))
-        from_ctx = acc.winner < n_ctx
-        acc_drafted = jnp.maximum(n_commit - 1, 0)
-        st["accepted_ctx"] = st["accepted_ctx"] + jnp.where(
-            active & from_ctx, acc_drafted, 0)
-        st["accepted_bigram"] = st["accepted_bigram"] + jnp.where(
-            active & ~from_ctx, acc_drafted, 0)
-        return (buf_n, len_n, done_n, state_n, st)
+    The freed slot's model cache is fully overwritten (cache.insert_slot), so
+    nothing can leak from the slot's previous occupant.  Compiles once per
+    prompt length P — the scheduler's length bucketing keeps that bounded.
+    ``slot``/``max_new_tokens``/``eos_id`` are traced, so heterogeneous
+    requests reuse the same executable.
+    """
+    P = prompt.shape[0]
+    L = state.buf_size
+    row_model = M.init_state(cfg, 1, L)
+    logits, row_model = M.prefill(params, cfg, row_model,
+                                  tokens=prompt[None].astype(jnp.int32),
+                                  last_only=True)
+    first = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+    row = jnp.zeros((L,), jnp.int32)
+    row = jax.lax.dynamic_update_slice(row, prompt.astype(jnp.int32), (0,))
+    row = row.at[P].set(first)
+    stats = {k: v.at[slot].set(0) for k, v in state.stats.items()}
+    stats["tokens"] = stats["tokens"].at[slot].set(1)
+    return DecodeState(
+        buf=state.buf.at[slot].set(row),
+        buf_len=state.buf_len.at[slot].set(P + 1),
+        prompt_len=state.prompt_len.at[slot].set(P),
+        budget=state.budget.at[slot].set(max_new_tokens),
+        eos_id=state.eos_id.at[slot].set(eos_id),
+        done=state.done.at[slot].set((first == eos_id) & (eos_id >= 0)),
+        active=state.active.at[slot].set(True),
+        model=C.insert_slot(state.model, row_model, slot),
+        stats=stats)
 
-    def greedy_body(carry):
-        buf_c, len_c, done_c, state_c, st = carry
-        last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)
-        logits, state_n = M.decode(params, cfg, state_c, last)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        active = (~done_c) & (len_c - P < spec.max_new_tokens)
-        slots = jnp.clip(len_c, 0, L - 1)
-        buf_n = buf_c.at[jnp.arange(B), slots].set(
-            jnp.where(active, nxt, buf_c[jnp.arange(B), slots]))
-        len_n = len_c + active.astype(jnp.int32)
-        done_n = done_c | (len_n - P >= spec.max_new_tokens)
-        if spec.eos_id >= 0:
-            done_n = done_n | (nxt == spec.eos_id)
-        st = dict(st)
-        st["calls"] = st["calls"] + active.astype(jnp.int32)
-        st["tokens"] = st["tokens"] + active.astype(jnp.int32)
-        return (buf_n, len_n, done_n, state_n, st)
 
-    body = greedy_body if spec.strategy == "greedy" else spec_body
-    carry = (buf, buf_len, done, state, stats)
-    buf, buf_len, done, state, stats = jax.lax.while_loop(cond, body, carry)
-    return buf, buf_len, stats
+@functools.partial(jax.jit, donate_argnums=(0,))
+def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
+    """Mark a retired row's slot as free (its cache is overwritten on the
+    next admit; see cache.reset_slot for eager scrubbing)."""
+    return dataclasses.replace(
+        state,
+        active=state.active.at[slot].set(False),
+        done=state.done.at[slot].set(True))
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
+               tables: Optional[NGramTables], s: DecodeState) -> DecodeState:
+    B, L = s.buf.shape
+    buf_c, len_c, done_c, state_c = s.buf, s.buf_len, s.done, s.model
+    st = s.stats
+    last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)[:, 0]
+    drafts, valid, n_ctx = _draft(spec, tables, buf_c, len_c, last)
+    rows = jnp.concatenate(
+        [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
+        axis=-1)                                                # (B,k,w+1)
+    logits, tails = M.verify(params, cfg, state_c, rows)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    acc = accept(drafts, greedy)
+    active = s.active & (~done_c) & (len_c - s.prompt_len < s.budget)
+    budget = jnp.maximum(s.prompt_len + s.budget - len_c, 0)
+    n_commit = jnp.where(active, jnp.minimum(acc.n_commit, budget), 0)
+    # eos truncation: commit only up to (and including) the first eos
+    iseos = (acc.tokens == s.eos_id[:, None]) & (s.eos_id >= 0)[:, None]
+    first_eos = jnp.argmax(iseos, axis=1)
+    has_eos = iseos.any(axis=1) & (first_eos < n_commit)
+    n_commit = jnp.where(has_eos, first_eos + 1, n_commit)
+    done_c = done_c | (has_eos & active)
+    # commit the model state
+    if not M.has_recurrent(cfg):
+        state_n = M.commit_kv_tails(cfg, state_c, tails, acc.winner,
+                                    n_commit)
+    else:
+        row_tok = jnp.take_along_axis(
+            rows, acc.winner[:, None, None], axis=1)[:, 0]      # (B,w+1)
+        _, state_n = M.decode(params, cfg, state_c, row_tok,
+                              n_commit=n_commit)
+    # write accepted tokens into the buffer
+    pos = jnp.arange(spec.w + 1)[None, :]
+    slots = jnp.clip(len_c[:, None] + pos, 0, L - 1)
+    gate = pos < n_commit[:, None]
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], slots.shape)
+    old = buf_c[b_idx, slots]
+    buf_n = buf_c.at[b_idx, slots].set(
+        jnp.where(gate, acc.tokens, old))
+    len_n = len_c + n_commit
+    done_n = done_c | (len_n - s.prompt_len >= s.budget)
+    # ---- stats ----
+    st = dict(st)
+    st["calls"] = st["calls"] + active.astype(jnp.int32)
+    st["tokens"] = st["tokens"] + n_commit
+    st["accept_hist"] = st["accept_hist"].at[
+        jnp.arange(B), jnp.clip(n_commit, 0, spec.w + 1)].add(
+            active.astype(jnp.int32))
+    n_win = jnp.take_along_axis(acc.n_acc, acc.winner[:, None], 1)[:, 0]
+    st["rank_hist"] = st["rank_hist"].at[jnp.arange(B), acc.winner].add(
+        (active & (n_win > 0)).astype(jnp.int32))
+    st["alloc_ctx"] = st["alloc_ctx"].at[
+        jnp.arange(B), jnp.clip(n_ctx, 0, spec.k)].add(
+            active.astype(jnp.int32))
+    from_ctx = acc.winner < n_ctx
+    acc_drafted = jnp.maximum(n_commit - 1, 0)
+    st["accepted_ctx"] = st["accepted_ctx"] + jnp.where(
+        active & from_ctx, acc_drafted, 0)
+    st["accepted_bigram"] = st["accepted_bigram"] + jnp.where(
+        active & ~from_ctx, acc_drafted, 0)
+    return dataclasses.replace(s, buf=buf_n, buf_len=len_n, done=done_n,
+                               model=state_n, stats=st)
+
+
+def _greedy_body(params, cfg: ModelConfig, spec: SpecConfig,
+                 tables: Optional[NGramTables], s: DecodeState) -> DecodeState:
+    B, L = s.buf.shape
+    buf_c, len_c, done_c, state_c = s.buf, s.buf_len, s.done, s.model
+    last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)
+    logits, state_n = M.decode(params, cfg, state_c, last)
+    active = s.active & (~done_c) & (len_c - s.prompt_len < s.budget)
+    # decode advances cur_len by 1 for every row; freeze inactive rows so
+    # the cur_len == buf_len - 1 invariant holds for done/free slots too
+    # (their discarded cache/state writes are row-local and invisible:
+    # key_positions only exposes p < cur_len, and admission overwrites).
+    state_n = {**state_n,
+               "cur_len": state_c["cur_len"] + active.astype(jnp.int32)}
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    slots = jnp.clip(len_c, 0, L - 1)
+    buf_n = buf_c.at[jnp.arange(B), slots].set(
+        jnp.where(active, nxt, buf_c[jnp.arange(B), slots]))
+    len_n = len_c + active.astype(jnp.int32)
+    done_n = done_c | (len_n - s.prompt_len >= s.budget)
+    done_n = done_n | ((nxt == s.eos_id) & (s.eos_id >= 0))
+    st = dict(s.stats)
+    st["calls"] = st["calls"] + active.astype(jnp.int32)
+    st["tokens"] = st["tokens"] + active.astype(jnp.int32)
+    return dataclasses.replace(s, buf=buf_n, buf_len=len_n, done=done_n,
+                               model=state_n, stats=st)
+
+
+def _step_body(params, cfg: ModelConfig, spec: SpecConfig,
+               tables: Optional[NGramTables], state: DecodeState
+               ) -> DecodeState:
+    body = _greedy_body if spec.strategy == "greedy" else _spec_body
+    return body(params, cfg, spec, tables, state)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2), donate_argnums=(3,))
+def spec_step(params, cfg: ModelConfig, spec: SpecConfig, state: DecodeState,
+              tables: Optional[NGramTables] = None) -> DecodeState:
+    """One jitted draft→verify→commit iteration over every active slot.
+
+    Reusable across calls: shapes are those of ``state``, so a serving loop
+    compiles this exactly once per (cfg, spec, state-shape) and then admits /
+    retires requests between invocations.  Rows that are inactive or done
+    commit nothing and their stats are untouched.
+
+    The incoming ``state`` is DONATED (as in admit_slot/release_slot): the
+    serving loop always rebinds, and donation lets XLA update the KV cache
+    in place instead of copying every leaf per verify call.  Callers that
+    need the previous state must copy it first.
+    """
+    return _step_body(params, cfg, spec, tables, state)
+
+
+# ---------------------------------------------------------------------------
+# one-shot generation (a while_loop over the same step body)
+# ---------------------------------------------------------------------------
+def generate(params, cfg: ModelConfig, spec: SpecConfig,
+             prompt: jnp.ndarray, tables: Optional[NGramTables] = None,
+             eos_id: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Generate up to max_new_tokens for every row of ``prompt`` (B, P).
+
+    ``eos_id``: optional per-row override of spec.eos_id (traced, so
+    heterogeneous batches share one compilation).  Returns (buf (B, L),
+    buf_len (B,), stats).  jit-compatible end to end.
+    """
+    state = init_decode_state(params, cfg, spec, prompt, eos_id=eos_id)
+
+    def cond(s: DecodeState):
+        return (~s.done).any() & ((s.buf_len - s.prompt_len) < s.budget).any()
+
+    def body(s: DecodeState):
+        return _step_body(params, cfg, spec, tables, s)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return state.buf, state.buf_len, state.stats
 
 
 def greedy_reference(params, cfg: ModelConfig, prompt: jnp.ndarray,

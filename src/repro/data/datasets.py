@@ -12,6 +12,7 @@ evaluation suites (no external data — consistent with the paper's P2):
 from __future__ import annotations
 
 import random
+import zlib
 from typing import List, Tuple
 
 _NAMES = ["Ada", "Bert", "Caro", "Dan", "Eve", "Finn", "Gus", "Hana",
@@ -77,7 +78,10 @@ TASKS = tuple(_MAKERS)
 
 
 def make_corpus(task: str, n_examples: int, seed: int = 0) -> List[str]:
-    rng = random.Random(seed * 7919 + hash(task) % 1000)
+    # crc32, not hash(): str hashing is randomized per process
+    # (PYTHONHASHSEED), which would make "seeded" corpora differ across
+    # runs — benchmarks and sharded training both need them reproducible.
+    rng = random.Random(seed * 7919 + zlib.crc32(task.encode()) % 1000)
     return [_MAKERS[task](rng) for _ in range(n_examples)]
 
 

@@ -31,6 +31,9 @@ def main() -> None:
     ap.add_argument("--n-prompts", type=int, default=4)
     ap.add_argument("--task", default="code", choices=["code", "math",
                                                        "chat"])
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve with slot-level continuous batching instead "
+                         "of static batches")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -56,10 +59,12 @@ def main() -> None:
 
     spec = SpecConfig(k=args.k, w=args.w, strategy=args.strategy,
                       max_new_tokens=args.max_new)
-    eng = ServingEngine(params, cfg, spec, max_batch=args.n_prompts)
+    eng = ServingEngine(params, cfg, spec, max_batch=args.n_prompts,
+                        max_new_cap=args.max_new)
     for prompt, _ in make_prompts(args.task, args.n_prompts):
         eng.submit(prompt, max_new_tokens=args.max_new)
-    for r in eng.serve_all():
+    served = eng.serve_continuous() if args.continuous else eng.serve_all()
+    for r in served:
         print(f"[req {r.request_id}] tokens/call="
               f"{r.stats['tokens_per_call']:.2f} "
               f"calls={r.stats['model_calls']} "

@@ -75,10 +75,52 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
         elif spec.mixer == SLSTM:
             nh = cfg.num_heads
             dh = cfg.d_model // nh
-            z = jnp.zeros((R, batch, nh, dh), jnp.float32)
-            groups[gid] = {"c": z, "n": z, "h": z,
+            # distinct buffers per leaf: sharing one zeros array here makes
+            # donation of the enclosing state illegal ("same buffer donated
+            # twice" in the jitted admit/spec-step path)
+            z = lambda: jnp.zeros((R, batch, nh, dh), jnp.float32)
+            groups[gid] = {"c": z(), "n": z(), "h": z(),
                            "m": jnp.full((R, batch, nh, dh), -1e9, jnp.float32)}
     return {"cur_len": jnp.zeros((batch,), jnp.int32), "groups": groups}
+
+
+# ----------------------------------------------------------------------------
+# slot management (continuous batching)
+# ----------------------------------------------------------------------------
+def insert_slot(state: Dict, row_state: Dict, slot) -> Dict:
+    """Overwrite batch slot ``slot`` of ``state`` with a batch-1 state.
+
+    ``row_state`` comes from prefilling one request in isolation (batch 1,
+    same ``max_len``); writing it over the slot replaces *every* leaf of the
+    previous occupant — KV rows, recurrent states and cur_len — so request
+    N+1 in a reused slot cannot observe request N's cache.  ``slot`` may be
+    a traced scalar (jit-compatible admission).
+    """
+    def ins(leaf, row):
+        if leaf.shape[2:] != row.shape[2:] or row.shape[1] != 1:
+            raise ValueError(f"slot insert shape mismatch: {leaf.shape} "
+                             f"vs {row.shape}")
+        return leaf.at[:, slot].set(row[:, 0])
+
+    groups = {gid: jax.tree_util.tree_map(ins, g, row_state["groups"][gid])
+              for gid, g in state["groups"].items()}
+    return {"cur_len": state["cur_len"].at[slot].set(row_state["cur_len"][0]),
+            "groups": groups}
+
+
+def reset_slot(cfg: ModelConfig, state: Dict, slot) -> Dict:
+    """Reset batch slot ``slot`` to the freshly-initialised empty state.
+
+    Passing the existing physical buffer length S back through init_state is
+    shape-stable: cache_buffer_len(cfg, S) == S whether S came from a linear
+    cache or a window-sized ring, and recurrent leaves ignore max_len.
+    """
+    S = 1
+    for gid, spec, _ in group_ids(cfg):
+        if spec.mixer == ATTN:
+            S = state["groups"][gid]["k"].shape[2]
+            break
+    return insert_slot(state, init_state(cfg, 1, S), slot)
 
 
 # ----------------------------------------------------------------------------

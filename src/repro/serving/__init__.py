@@ -1,3 +1,3 @@
 from . import engine, sampling, scheduler  # noqa: F401
 from .engine import ServingEngine  # noqa: F401
-from .scheduler import Request, Scheduler  # noqa: F401
+from .scheduler import Request, Scheduler, SlotMap  # noqa: F401

@@ -4,23 +4,36 @@ One ``ServingEngine`` owns (params, cfg, tables) and serves batched requests
 with either plain greedy decoding or the paper's batched speculation —
 switching is one constructor argument, which is the paper's P3
 ('plug-and-play', no model modification).
+
+Two serving modes share the engine:
+
+  - ``serve_all``     — static batching: the scheduler forms whole batches
+    and each runs one monolithic jitted ``generate``; a finished row idles
+    its slot until the slowest row of its batch completes.
+  - ``serve_continuous`` / ``step`` — continuous batching over the reusable
+    jitted ``spec_step``: between verify calls, finished rows are retired
+    and queued prompts are prefilled into the freed slots (admit_slot), so
+    slots never idle while there is work queued.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.ngram_tables import NGramTables, build_bigram, build_unigram
-from ..core.spec_engine import SpecConfig, generate
+from ..core.spec_engine import (DecodeState, SpecConfig, admit_slot,
+                                empty_decode_state, generate, release_slot,
+                                spec_step)
 from ..data.tokenizer import ByteTokenizer
 from ..models import model as M
 from ..models.config import ModelConfig
-from .scheduler import Batch, Request, Scheduler
+from .scheduler import DEFAULT_BUCKETS, Batch, Request, Scheduler, SlotMap
 
 
 class ServingEngine:
@@ -28,14 +41,23 @@ class ServingEngine:
                  spec: Optional[SpecConfig] = None,
                  tables: Optional[NGramTables] = None,
                  max_batch: int = 8,
-                 adaptive: bool = False):
+                 adaptive: bool = False,
+                 buckets: Optional[Tuple[int, ...]] = None,
+                 max_new_cap: int = 64):
         """``adaptive``: pick (k, w) per batch with the UCB controller
-        (core/controller.py, beyond-paper) instead of a static setting."""
+        (core/controller.py, beyond-paper) instead of a static setting.
+        ``buckets``/``max_new_cap`` bound the continuous-batching DecodeState
+        (buffer length = largest bucket + max_new_cap + w + 2)."""
         self.params = params
         self.cfg = cfg
         self.spec = spec or SpecConfig(strategy="greedy")
         self.tok = ByteTokenizer()
-        self.scheduler = Scheduler(max_batch=max_batch)
+        self.max_batch = max_batch
+        self.max_new_cap = max_new_cap
+        self._explicit_buckets = buckets is not None
+        self.scheduler = Scheduler(
+            max_batch=max_batch,
+            buckets=buckets if buckets is not None else DEFAULT_BUCKETS)
         self.controller = None
         if adaptive:
             from ..core.controller import AdaptiveKW
@@ -45,6 +67,9 @@ class ServingEngine:
                                        w_max=max(self.spec.w, 16))
         self.tables = tables
         self._gen_cache: Dict = {}
+        # continuous-batching state, built lazily on first step()
+        self._cont_state: Optional[DecodeState] = None
+        self._slots: Optional[SlotMap] = None
 
     # ------------------------------------------------------------------
     def build_tables(self, k_max: int = 16, w_max: int = 16,
@@ -63,8 +88,10 @@ class ServingEngine:
                            bigram_chain=chain)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: str, max_new_tokens: int = 64) -> Request:
-        req = Request(prompt=prompt, max_new_tokens=max_new_tokens)
+    def submit(self, prompt: str, max_new_tokens: int = 64,
+               eos_id: int = -1) -> Request:
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                      eos_id=eos_id)
         self.scheduler.submit(req)
         return req
 
@@ -80,14 +107,23 @@ class ServingEngine:
                 spec = dataclasses.replace(spec, k=max(k, 1), w=max(w, 1),
                                            strategy=strategy)
             self._gen_cache[key] = jax.jit(
-                lambda p, toks, tbl: generate(p, self.cfg, spec, toks, tbl))
+                lambda p, toks, eos, tbl: generate(p, self.cfg, spec, toks,
+                                                   tbl, eos_id=eos))
         return self._gen_cache[key]
+
+    def _effective_eos(self, req: Request) -> int:
+        """Per-request eos wins; fall back to the engine-wide spec.eos_id —
+        the same resolution in both serving modes, so a given submission
+        stops identically under serve_all and serve_continuous."""
+        return req.eos_id if req.eos_id >= 0 else self.spec.eos_id
 
     def run_batch(self, batch: Batch) -> List[Request]:
         kw = self.controller.choose() if self.controller else None
         fn = self._gen_fn(batch.max_new_tokens, kw)
+        eos = jnp.asarray([self._effective_eos(r) for r in batch.requests],
+                          jnp.int32)
         t0 = time.perf_counter()
-        buf, blen, stats = fn(self.params, jnp.asarray(batch.tokens),
+        buf, blen, stats = fn(self.params, jnp.asarray(batch.tokens), eos,
                               self.tables)
         buf.block_until_ready()
         dt = time.perf_counter() - t0
@@ -99,7 +135,8 @@ class ServingEngine:
         buf = np.asarray(buf)
         blen = np.asarray(blen)
         for i, req in enumerate(batch.requests):
-            req.output = self.tok.decode(buf[i, P:blen[i]])
+            req.output_ids = buf[i, P:blen[i]].copy()
+            req.output = self.tok.decode(req.output_ids)
             req.stats = {
                 "new_tokens": int(blen[i] - P),
                 "model_calls": int(np.asarray(stats["calls"])[i]),
@@ -117,3 +154,122 @@ class ServingEngine:
             if batch is None:
                 return done
             done.extend(self.run_batch(batch))
+
+    # ------------------------------------------------------------------
+    # continuous batching (slot-level admission / retirement)
+    # ------------------------------------------------------------------
+    def _init_continuous(self) -> None:
+        if self.controller is not None:
+            raise NotImplementedError(
+                "adaptive (k,w) requires a static batch per arm; in-flight "
+                "adaptation over spec_step is a ROADMAP item")
+        # size the DecodeState to the queued workload, not the 512-token
+        # worst case; the scheduler itself is left untouched (a later
+        # serve_all on this engine sees the full bucket ladder).  Prompts
+        # longer than the sized capacity are truncated at admission — with
+        # a warning, mirroring the max_new_cap clamp.  Pass buckets=
+        # explicitly to reserve more up front.
+        prompt_cap = self.scheduler.buckets[-1]
+        if not self._explicit_buckets:
+            prompt_cap = self.scheduler.max_queued_bucket() or prompt_cap
+        self._cont_prompt_cap = prompt_cap
+        buf_size = prompt_cap + self.max_new_cap + self.spec.w + 2
+        self._cont_state = empty_decode_state(self.cfg, self.spec,
+                                              self.max_batch, buf_size)
+        self._slots = SlotMap(self.max_batch)
+
+    def in_flight(self) -> int:
+        return len(self._slots) if self._slots is not None else 0
+
+    def _retire_finished(self) -> List[Request]:
+        state = self._cont_state
+        done = np.asarray(state.done)
+        if not done[[s for s, _ in self._slots.occupied()]].any():
+            return []
+        # one device->host transfer per array, not per retired slot
+        blen = np.asarray(state.buf_len)
+        plen = np.asarray(state.prompt_len)
+        buf = np.asarray(state.buf)
+        calls_np = np.asarray(state.stats["calls"])
+        tokens_np = np.asarray(state.stats["tokens"])
+        retired: List[Request] = []
+        for slot, req in self._slots.occupied():
+            if not done[slot]:
+                continue
+            calls = int(calls_np[slot])
+            tokens = int(tokens_np[slot])
+            req.output_ids = buf[slot, plen[slot]:blen[slot]].copy()
+            req.output = self.tok.decode(req.output_ids)
+            req.stats = {
+                "new_tokens": int(blen[slot] - plen[slot]),
+                "model_calls": calls,
+                "tokens_per_call": float(tokens / max(1, calls)),
+                # per-request admit->retire latency; deliberately NOT named
+                # wall_time_s (which in serve_all is the shared whole-batch
+                # generate time — a different quantity)
+                "latency_s": time.perf_counter() - req.stats["admit_t"],
+            }
+            state = release_slot(state, jnp.int32(slot))
+            self._slots.release(slot)
+            retired.append(req)
+        self._cont_state = state
+        return retired
+
+    def _admit_queued(self) -> None:
+        state = self._cont_state
+        for slot in self._slots.free_slots():
+            popped = self.scheduler.pop_next()
+            if popped is None:
+                break
+            req, toks = popped
+            if toks.shape[0] > self._cont_prompt_cap:
+                warnings.warn(
+                    f"request {req.request_id}: prompt needs a "
+                    f"{toks.shape[0]}-token bucket but the continuous "
+                    f"DecodeState was sized for {self._cont_prompt_cap} "
+                    f"(from the first wave of prompts); keeping the last "
+                    f"{self._cont_prompt_cap} tokens (pass buckets= to "
+                    f"reserve more)")
+                toks = toks[-self._cont_prompt_cap:]
+            mnt = min(req.max_new_tokens, self.max_new_cap)
+            if mnt < req.max_new_tokens:
+                # static serve_all honours any budget (it sizes buffers per
+                # batch); the continuous DecodeState is sized once by
+                # max_new_cap, so an oversized request is clamped — loudly.
+                warnings.warn(
+                    f"request {req.request_id}: max_new_tokens "
+                    f"{req.max_new_tokens} exceeds the engine's continuous "
+                    f"max_new_cap={self.max_new_cap}; clamping (raise "
+                    f"max_new_cap to honour larger budgets)")
+            state = admit_slot(self.params, self.cfg, state,
+                               jnp.int32(slot), jnp.asarray(toks),
+                               jnp.int32(mnt),
+                               jnp.int32(self._effective_eos(req)))
+            self._slots.assign(slot, req)
+            req.stats = {"admit_t": time.perf_counter()}
+        self._cont_state = state
+
+    def step(self) -> List[Request]:
+        """One continuous-batching iteration: retire finished rows, admit
+        queued prompts into the freed slots, then run one jitted spec_step
+        over every active slot.  Returns the requests retired this step."""
+        if self._cont_state is None:
+            self._init_continuous()
+        retired = self._retire_finished()
+        self._admit_queued()
+        # occupancy is tracked host-side: after retirement every occupied
+        # slot is runnable (an admission that hit eos on its first token is
+        # retired next step; the one no-op spec_step it gets is rarer than
+        # paying a device->host sync on every step to detect it).
+        if len(self._slots):
+            self._cont_state = spec_step(self.params, self.cfg, self.spec,
+                                         self._cont_state, self.tables)
+        return retired
+
+    def serve_continuous(self) -> List[Request]:
+        """Drain the queue with continuous batching; blocks until idle."""
+        done: List[Request] = []
+        while True:
+            done.extend(self.step())
+            if self.scheduler.pending() == 0 and self.in_flight() == 0:
+                return done

@@ -1,8 +1,13 @@
-"""Request scheduling: queueing, length-bucketing, batch formation.
+"""Request scheduling: queueing, length-bucketing, batch formation, and the
+slot map for continuous batching.
 
-The engine's jitted generation requires equal prompt lengths per batch (one
+The engine's jitted generation requires a bounded set of prompt lengths (one
 prefill shape per bucket keeps recompilation bounded); the scheduler pads
-prompts up to the bucket boundary and groups by (bucket, max_new_tokens).
+prompts up to the bucket boundary.  Static batching groups whole batches by
+(bucket, max_new_tokens); continuous batching instead pops requests FIFO one
+at a time (``pop_next``) and tracks which DecodeState slot each in-flight
+request occupies (``SlotMap``), so rows can be admitted and retired between
+verify calls.
 """
 from __future__ import annotations
 
@@ -22,9 +27,11 @@ _counter = itertools.count()
 class Request:
     prompt: str
     max_new_tokens: int = 64
+    eos_id: int = -1             # -1: never stop on eos
     request_id: int = dataclasses.field(default_factory=lambda: next(_counter))
     # filled on completion:
     output: Optional[str] = None
+    output_ids: Optional[np.ndarray] = None
     stats: Optional[dict] = None
 
 
@@ -35,11 +42,22 @@ class Batch:
     max_new_tokens: int
 
 
+DEFAULT_BUCKETS = (32, 64, 128, 256, 512)
+
+
+def fit_bucket(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket holding an n-token prompt (largest bucket clamps)."""
+    for b in sorted(buckets):
+        if n <= b:
+            return b
+    return max(buckets)
+
+
 class Scheduler:
     """FIFO with length bucketing."""
 
     def __init__(self, max_batch: int = 8,
-                 buckets: Tuple[int, ...] = (32, 64, 128, 256, 512)):
+                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS):
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets))
         self.tok = ByteTokenizer()
@@ -51,10 +69,7 @@ class Scheduler:
         return req.request_id
 
     def _bucket(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        return self.buckets[-1]
+        return fit_bucket(n, self.buckets)
 
     def next_batch(self) -> Optional[Batch]:
         if not self._queue:
@@ -75,11 +90,66 @@ class Scheduler:
         # the jitted engine prefills a uniform length and starts generating
         # from the final position of every row.  (Per-row pad masking inside
         # recurrent prefill is future work; BOS-padding keeps the shift tiny.)
-        toks = np.full((len(chosen), bucket), self.tok.bos_id, np.int32)
-        for i, (_, ids) in enumerate(chosen):
-            ids = ids[-bucket:]
-            toks[i, -len(ids):] = ids
+        toks = np.stack([self.pad_to_bucket(ids) for _, ids in chosen])
         return Batch([r for r, _ in chosen], toks, mnt)
+
+    def max_queued_bucket(self) -> Optional[int]:
+        """Largest bucket any currently-queued prompt needs (None if idle).
+        Lets the engine size its continuous DecodeState to the workload
+        instead of the worst-case largest bucket."""
+        if not self._queue:
+            return None
+        return max(self._bucket(len(ids)) for _, ids in self._queue)
+
+    def pad_to_bucket(self, ids: List[int]) -> np.ndarray:
+        """LEFT-pad ``ids`` with BOS so the last prompt token sits at position
+        bucket-1 — identical placement to the static ``next_batch`` path, so
+        both serving modes produce bit-identical outputs per request."""
+        bucket = self._bucket(len(ids))
+        toks = np.full((bucket,), self.tok.bos_id, np.int32)
+        ids = ids[-bucket:]
+        toks[bucket - len(ids):] = ids
+        return toks
+
+    def pop_next(self) -> Optional[Tuple[Request, np.ndarray]]:
+        """FIFO pop for continuous batching: (request, (bucket,) int32)."""
+        if not self._queue:
+            return None
+        req, ids = self._queue.pop(0)
+        return req, self.pad_to_bucket(ids)
 
     def pending(self) -> int:
         return len(self._queue)
+
+
+class SlotMap:
+    """Which request occupies which DecodeState slot (continuous batching)."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self._slots: List[Optional[Request]] = [None] * num_slots
+
+    def __len__(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def occupied(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self._slots) if r is not None]
+
+    def get(self, slot: int) -> Optional[Request]:
+        return self._slots[slot]
+
+    def assign(self, slot: int, req: Request) -> None:
+        if self._slots[slot] is not None:
+            raise ValueError(f"slot {slot} already occupied by request "
+                             f"{self._slots[slot].request_id}")
+        self._slots[slot] = req
+
+    def release(self, slot: int) -> Request:
+        req = self._slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._slots[slot] = None
+        return req

@@ -11,6 +11,13 @@ from repro.models.config import BlockSpec, ModelConfig
 F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long model-level suite; deselect with -m 'not slow' for the "
+        "inner-loop fast lane (tier-1 verification still runs everything)")
+
+
 @pytest.fixture(scope="session")
 def tiny_dense_cfg():
     return ModelConfig(name="tiny", num_layers=2, d_model=64, num_heads=4,

@@ -1,0 +1,225 @@
+"""Equivalence tests for the spec_step refactor and continuous batching.
+
+(a) driving generation one jitted spec_step at a time is bit-identical to
+    the one-shot while_loop ``generate`` for every strategy;
+(b) continuous serving with staggered admission/retirement, heterogeneous
+    per-request max_new_tokens and eos truncation matches greedy_reference
+    per request — and speculation is actually active (model calls strictly
+    fewer than committed tokens for the mixed strategy).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ngram_tables import NGramTables, build_bigram, build_unigram
+from repro.core.spec_engine import (SpecConfig, generate, greedy_reference,
+                                    init_decode_state, spec_step)
+from repro.models import model as M
+from repro.serving import ServingEngine
+
+pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
+
+
+def _tables(params, cfg, k_max=8, w_max=8):
+    fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+    topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=k_max, w_max=w_max,
+                               batch=cfg.vocab_size)
+    uni = build_unigram(params["embed"]["embedding"],
+                        params["embed"].get("lm_head",
+                                            params["embed"]["embedding"].T),
+                        k_max=k_max)
+    return NGramTables(uni, topk, chain)
+
+
+def _drive_steps(params, cfg, spec, state, tables, max_steps=200):
+    for _ in range(max_steps):
+        if not bool(np.asarray(~state.done).any()):
+            return state
+        state = spec_step(params, cfg, spec, state, tables)
+    raise AssertionError("spec_step did not converge")
+
+
+# ---------------------------------------------------------------------------
+# (a) step-driven == one-shot, bit for bit, for every strategy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["greedy", "bigram", "unigram",
+                                      "context", "mixed"])
+def test_spec_step_matches_generate(tiny_dense, strategy):
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 2, 10, 24
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    spec = SpecConfig(k=4, w=3, q=1, strategy=strategy, max_new_tokens=N)
+    buf, blen, stats = generate(params, cfg, spec, prompt, tables)
+    state = init_decode_state(params, cfg, spec, prompt)
+    state = _drive_steps(params, cfg, spec, state, tables)
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(state.buf))
+    np.testing.assert_array_equal(np.asarray(blen),
+                                  np.asarray(state.buf_len))
+    for key in stats:
+        np.testing.assert_array_equal(np.asarray(stats[key]),
+                                      np.asarray(state.stats[key]),
+                                      err_msg=f"stats[{key}] diverged")
+
+
+@pytest.mark.parametrize("strategy", ["greedy", "mixed"])
+def test_spec_step_recurrent_continuous(tiny_xlstm_cfg, strategy):
+    """Recurrent (mLSTM/sLSTM) archs through the continuous path: staggered
+    admission via the donated admit_slot/spec_step jits (regression for the
+    shared-zeros-buffer donation failure) must match greedy_reference."""
+    from repro.core.spec_engine import admit_slot, empty_decode_state
+    cfg = tiny_xlstm_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tables = _tables(params, cfg) if strategy == "mixed" else None
+    B, P, N = 2, 8, 10
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=3, w=3, strategy=strategy, max_new_tokens=N)
+    state = empty_decode_state(cfg, spec, 2, P + N + spec.w + 2)
+    state = admit_slot(params, cfg, state, jnp.int32(0), prompt[0],
+                       jnp.int32(N), jnp.int32(-1))
+    state = spec_step(params, cfg, spec, state, tables)   # slot 1 still free
+    state = admit_slot(params, cfg, state, jnp.int32(1), prompt[1],
+                       jnp.int32(N), jnp.int32(-1))
+    state = _drive_steps(params, cfg, spec, state, tables)
+    for b in range(B):
+        np.testing.assert_array_equal(np.asarray(state.buf[b, P:P + N]),
+                                      np.asarray(ref[b, P:]))
+
+
+def test_spec_step_heterogeneous_budgets_and_eos(tiny_dense):
+    """Per-slot budgets/eos on a single shared DecodeState."""
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 2, 10, 24
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    eos = int(ref[1, P + 5])            # row 1 stops at its first eos hit
+    spec = SpecConfig(k=4, w=3, strategy="mixed", max_new_tokens=N)
+    state = init_decode_state(params, cfg, spec, prompt,
+                              max_new_tokens=jnp.asarray([13, N]),
+                              eos_id=jnp.asarray([-1, eos]))
+    state = _drive_steps(params, cfg, spec, state, tables)
+    np.testing.assert_array_equal(np.asarray(state.buf[0, P:P + 13]),
+                                  np.asarray(ref[0, P:P + 13]))
+    assert int(state.buf_len[0]) == P + 13
+    n1 = int(state.buf_len[1]) - P
+    first = list(np.asarray(ref[1, P:])).index(eos)
+    assert n1 == first + 1
+    np.testing.assert_array_equal(np.asarray(state.buf[1, P:P + n1]),
+                                  np.asarray(ref[1, P:P + first + 1]))
+
+
+# ---------------------------------------------------------------------------
+# (b) continuous serving == greedy_reference per request
+# ---------------------------------------------------------------------------
+def _reference_ids(eng, params, cfg, prompt: str, max_new: int,
+                   eos_id: int = -1):
+    """Expected output ids: greedy on the same padded prompt, truncated at
+    the first eos (inclusive) exactly like the engine."""
+    padded = eng.scheduler.pad_to_bucket(eng.tok.encode(prompt))[None]
+    ref = greedy_reference(params, cfg, jnp.asarray(padded), max_new)
+    out = list(np.asarray(ref[0, padded.shape[1]:]))
+    if eos_id >= 0 and eos_id in out:
+        out = out[:out.index(eos_id) + 1]
+    return np.asarray(out, np.int32)
+
+
+@pytest.mark.parametrize("strategy", ["mixed", "greedy"])
+def test_continuous_staggered_matches_reference(tiny_dense, strategy):
+    cfg, params = tiny_dense
+    spec = SpecConfig(k=4, w=3, strategy=strategy, max_new_tokens=24)
+    tables = _tables(params, cfg) if strategy != "greedy" else None
+    eng = ServingEngine(params, cfg, spec, tables=tables, max_batch=2,
+                        buckets=(16,), max_new_cap=24)
+    # r4 stops on an eos forced onto its own greedy trajectory
+    eos4 = int(_reference_ids(eng, params, cfg, "eos victim", 24)[6])
+    # wave 1: two requests with different budgets
+    r1 = eng.submit("hello world", max_new_tokens=18)
+    r2 = eng.submit("a rather different prompt", max_new_tokens=9)
+    for _ in range(2):
+        eng.step()
+    # wave 2 arrives mid-flight (slots retire/admit between spec_steps)
+    r3 = eng.submit("late arrival", max_new_tokens=21)
+    r4 = eng.submit("eos victim", max_new_tokens=24, eos_id=eos4)
+    done = eng.serve_continuous()
+    reqs = {r.request_id: r for r in done}
+    assert sorted(reqs) == sorted(r.request_id for r in (r1, r2, r3, r4))
+    for req in (r1, r2, r3, r4):
+        expect = _reference_ids(eng, params, cfg, req.prompt,
+                                req.max_new_tokens, req.eos_id)
+        np.testing.assert_array_equal(reqs[req.request_id].output_ids, expect,
+                                      err_msg=f"request {req.request_id}")
+        assert reqs[req.request_id].stats["new_tokens"] == len(expect)
+    assert reqs[r4.request_id].output_ids[-1] == eos4   # eos truncation hit
+    assert reqs[r4.request_id].stats["new_tokens"] <= 7
+    if strategy == "mixed":
+        # speculation must be active: strictly fewer verify calls than tokens
+        for req in (r1, r3):
+            st = reqs[req.request_id].stats
+            assert st["model_calls"] < st["new_tokens"], (
+                req.request_id, st)
+
+
+def test_eos_symmetric_between_modes(tiny_dense):
+    """A submission with a per-request eos stops identically under static
+    serve_all and continuous serve_continuous."""
+    cfg, params = tiny_dense
+    spec = SpecConfig(k=4, w=3, strategy="mixed", max_new_tokens=20)
+    tables = _tables(params, cfg)
+    outs = {}
+    for mode in ("static", "continuous"):
+        eng = ServingEngine(params, cfg, spec, tables=tables, max_batch=2,
+                            buckets=(16,), max_new_cap=20)
+        if mode == "static":
+            eos = int(_reference_ids(eng, params, cfg, "stop me", 20)[4])
+        eng.submit("stop me", max_new_tokens=20, eos_id=eos)
+        done = (eng.serve_all() if mode == "static"
+                else eng.serve_continuous())
+        outs[mode] = done[0].output_ids
+        assert done[0].output_ids[-1] == eos
+    np.testing.assert_array_equal(outs["static"], outs["continuous"])
+
+
+def test_slot_reuse_no_cross_request_leakage(tiny_dense):
+    """One slot, several sequential requests: each output must equal the
+    request's isolated greedy reference (any cache residue would diverge)."""
+    cfg, params = tiny_dense
+    spec = SpecConfig(k=4, w=3, strategy="mixed", max_new_tokens=16)
+    eng = ServingEngine(params, cfg, spec, tables=_tables(params, cfg),
+                        max_batch=1, buckets=(16,), max_new_cap=16)
+    prompts = ["first request", "second, quite unlike the first",
+               "third!"]
+    reqs = [eng.submit(p, max_new_tokens=16) for p in prompts]
+    done = eng.serve_continuous()
+    assert len(done) == 3
+    for req in reqs:
+        expect = _reference_ids(eng, params, cfg, req.prompt,
+                                req.max_new_tokens)
+        got = next(r for r in done if r.request_id == req.request_id)
+        np.testing.assert_array_equal(got.output_ids, expect)
+
+
+def test_continuous_throughput_stats(tiny_dense):
+    """Per-request stats survive slot reuse: calls/token counters are reset
+    at admission, so a recycled slot reports only its own request."""
+    cfg, params = tiny_dense
+    spec = SpecConfig(k=4, w=3, strategy="mixed", max_new_tokens=12)
+    eng = ServingEngine(params, cfg, spec, tables=_tables(params, cfg),
+                        max_batch=1, buckets=(16,), max_new_cap=12)
+    a = eng.submit("aaaa", max_new_tokens=12)
+    b = eng.submit("bbbb", max_new_tokens=5)
+    done = eng.serve_continuous()
+    stats = {r.request_id: r.stats for r in done}
+    assert stats[a.request_id]["new_tokens"] == 12
+    assert stats[b.request_id]["new_tokens"] == 5
+    # slot stats were zeroed between requests: b cannot have inherited a's
+    # call count (a needs >= ceil(12 / (w+2)) calls; b <= its own 5)
+    assert 1 <= stats[b.request_id]["model_calls"] <= 5
+    assert stats[a.request_id]["model_calls"] >= 3
+    for st in stats.values():
+        assert st["latency_s"] > 0

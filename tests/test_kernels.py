@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
+
 
 def _mk(seed, shape, dtype):
     x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)

@@ -11,6 +11,9 @@ from repro.models.mamba import init_mamba, mamba_mix, selective_scan
 from repro.models.xlstm import (_mlstm_cell_chunkwise, _mlstm_cell_scan,
                                 init_mlstm, mlstm_mix)
 
+pytestmark = pytest.mark.slow  # model-level suite; excluded from the
+                               # -m "not slow" fast lane
+
 F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32)
 
 

@@ -7,6 +7,8 @@ import pytest
 from repro.models import model as M
 from repro.models.config import BlockSpec, ModelConfig
 
+pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
+
 F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32, vocab_size=61)
 
 FAMILIES = {

@@ -1,13 +1,17 @@
 """Property-based tests (hypothesis) over the system's invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.drafters import context_ngram_draft
 from repro.core.verify import accept
+
+pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
 
 SETTINGS = dict(max_examples=30, deadline=None,
                 suppress_health_check=[hypothesis.HealthCheck.too_slow])

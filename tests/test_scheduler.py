@@ -1,0 +1,166 @@
+"""Direct coverage for serving/scheduler.py: bucketing, padding, FIFO
+fairness across next_batch calls, the continuous-batching slot map, and the
+cache slot-reset/insert helpers (no cross-request leakage)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import cache as C
+from repro.models import model as M
+from repro.serving.scheduler import (Request, Scheduler, SlotMap,
+                                     fit_bucket)
+
+
+# ---------------------------------------------------------------------------
+# bucketing / padding
+# ---------------------------------------------------------------------------
+def test_bucket_boundaries():
+    s = Scheduler(buckets=(32, 64, 128))
+    assert s._bucket(1) == 32
+    assert s._bucket(32) == 32          # boundary is inclusive
+    assert s._bucket(33) == 64
+    assert s._bucket(64) == 64
+    assert s._bucket(128) == 128
+    assert s._bucket(129) == 128        # overflow clamps to largest bucket
+    # buckets are sorted regardless of constructor order
+    assert Scheduler(buckets=(128, 32, 64)).buckets == (32, 64, 128)
+
+
+def test_fit_bucket_and_queue_sizing():
+    assert fit_bucket(5) == 32 and fit_bucket(33) == 64
+    assert fit_bucket(9999) == 512                  # clamps to largest
+    assert fit_bucket(40, (128, 32, 64)) == 64      # sorts its input
+    s = Scheduler(buckets=(16, 32, 64))
+    assert s.max_queued_bucket() is None
+    s.submit(Request(prompt="a" * 5))
+    assert s.max_queued_bucket() == 16
+    s.submit(Request(prompt="b" * 30))
+    assert s.max_queued_bucket() == 32
+
+
+def test_left_padding_places_last_token_at_bucket_end():
+    s = Scheduler(buckets=(16,))
+    tok = ByteTokenizer()
+    ids = tok.encode("hello")            # bos + 5 bytes = 6 ids
+    padded = s.pad_to_bucket(ids)
+    assert padded.shape == (16,)
+    assert list(padded[-len(ids):]) == ids               # suffix = prompt
+    assert (padded[:16 - len(ids)] == tok.bos_id).all()  # prefix = BOS fill
+    # over-long prompts keep the most recent bucket-many ids
+    long_ids = tok.encode("x" * 40)
+    padded = s.pad_to_bucket(long_ids)
+    assert list(padded) == long_ids[-16:]
+
+
+def test_batches_never_drop_or_duplicate_requests():
+    s = Scheduler(max_batch=3, buckets=(16, 32))
+    reqs = [Request(prompt="a" * (3 + 7 * (i % 4)), max_new_tokens=8)
+            for i in range(11)]
+    for r in reqs:
+        s.submit(r)
+    seen = []
+    while (b := s.next_batch()) is not None:
+        assert len(b.requests) <= 3
+        assert b.tokens.shape[0] == len(b.requests)
+        seen.extend(r.request_id for r in b.requests)
+    assert s.pending() == 0
+    assert sorted(seen) == sorted(r.request_id for r in reqs)
+    assert len(seen) == len(set(seen))
+
+
+def test_fifo_within_group():
+    s = Scheduler(max_batch=2, buckets=(16,))
+    reqs = [Request(prompt=f"req {i}", max_new_tokens=8) for i in range(5)]
+    for r in reqs:
+        s.submit(r)
+    order = []
+    while (b := s.next_batch()) is not None:
+        order.extend(r.request_id for r in b.requests)
+    assert order == [r.request_id for r in reqs]   # submission order
+
+
+def test_pop_next_fifo():
+    s = Scheduler(buckets=(16,))
+    reqs = [Request(prompt=f"req {i}") for i in range(3)]
+    for r in reqs:
+        s.submit(r)
+    popped = []
+    while (p := s.pop_next()) is not None:
+        req, toks = p
+        assert toks.shape == (16,)
+        popped.append(req.request_id)
+    assert popped == [r.request_id for r in reqs]
+    assert s.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# slot map
+# ---------------------------------------------------------------------------
+def test_slot_map_assign_release_reuse():
+    sm = SlotMap(2)
+    assert sm.free_slots() == [0, 1] and len(sm) == 0
+    r1, r2, r3 = (Request(prompt=p) for p in "abc")
+    sm.assign(0, r1)
+    sm.assign(1, r2)
+    assert sm.free_slots() == [] and len(sm) == 2
+    assert sm.get(0) is r1
+    with pytest.raises(ValueError):
+        sm.assign(0, r3)                 # double-assign is a bug
+    assert sm.release(0) is r1
+    with pytest.raises(ValueError):
+        sm.release(0)                    # double-release too
+    sm.assign(0, r3)                     # freed slot is reusable
+    assert {i for i, _ in sm.occupied()} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# cache slot reset / insert (continuous-batching admission primitive)
+# ---------------------------------------------------------------------------
+def _states_equal(a, b, slot_a, slot_b):
+    """Compare one batch row of two cache states leaf-by-leaf."""
+    for gid, g in a["groups"].items():
+        la = jax.tree_util.tree_leaves(g)
+        lb = jax.tree_util.tree_leaves(b["groups"][gid])
+        for x, y in zip(la, lb):
+            if not np.array_equal(np.asarray(x[:, slot_a]),
+                                  np.asarray(y[:, slot_b])):
+                return False
+    return bool(a["cur_len"][slot_a] == b["cur_len"][slot_b])
+
+
+@pytest.mark.parametrize("arch", ["dense", "hybrid"])
+def test_cache_slot_reset_and_insert(arch, tiny_dense_cfg, tiny_hybrid_cfg):
+    cfg = tiny_dense_cfg if arch == "dense" else tiny_hybrid_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    L = 24
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    state = M.init_state(cfg, 2, L)
+    _, state = M.prefill(params, cfg, state, tokens=prompt)
+
+    # reset row 1: it must equal a freshly-initialised state (no residue
+    # from the previous request), row 0 must be untouched
+    state_r = C.reset_slot(cfg, state, jnp.int32(1))
+    fresh = M.init_state(cfg, 2, L)
+    assert _states_equal(state_r, fresh, 1, 1)
+    assert int(state_r["cur_len"][1]) == 0
+    assert _states_equal(state_r, state, 0, 0)
+
+    # insert: prefilling row 1's prompt alone and inserting it into slot 1
+    # reproduces the batched prefill bit-for-bit (so admission into a reused
+    # slot serves request N+1 exactly as if it had a private cache)
+    row = M.init_state(cfg, 1, L)
+    _, row = M.prefill(params, cfg, row, tokens=prompt[1:2])
+    state_i = C.insert_slot(state_r, row, jnp.int32(1))
+    assert _states_equal(state_i, state, 1, 1)
+    assert int(state_i["cur_len"][1]) == int(state["cur_len"][1])
+
+
+def test_insert_slot_rejects_shape_mismatch(tiny_dense_cfg):
+    cfg = tiny_dense_cfg
+    state = M.init_state(cfg, 2, 24)
+    row = M.init_state(cfg, 1, 32)       # different buffer length
+    with pytest.raises(ValueError):
+        C.insert_slot(state, row, jnp.int32(0))

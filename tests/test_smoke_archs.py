@@ -13,6 +13,8 @@ from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.models import model as M
 from repro.train import AdamWConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
+
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward_and_train(arch):

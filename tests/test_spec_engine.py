@@ -8,6 +8,8 @@ from repro.core.ngram_tables import (NGramTables, build_bigram, build_unigram)
 from repro.core.spec_engine import SpecConfig, generate, greedy_reference
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
+
 
 def _tables(params, cfg, k_max=8, w_max=8):
     fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
