@@ -51,6 +51,12 @@ def main() -> None:
     for name, us, derived in t5["rows"]:
         _row(name, f"{us:.0f}", derived)
 
+    t5b = spec_call_bench.run_backends()
+    for backend, r in t5b["backends"].items():
+        _row(f"backend_sweep_{backend}", f"{r['verify_call_us']:.0f}",
+             f"tokens/s={r['tokens_per_s']:.1f};"
+             f"tok/call={r['tokens_per_call']:.2f}")
+
     try:
         from . import roofline
         res = roofline.analyze()

@@ -8,12 +8,23 @@ of the paper's variable-length Python drafting.
 
 The context N-gram uses a sort/hash reformulation of the paper's
 ``torch.unfold`` + ``torch.unique`` code (Appendix B.2), which is
-jit-compatible: occurrence counts via sorted-hash range queries, recency
-tie-break via a (count, position) lexicographic score, dedup by keeping the
-latest occurrence of each continuation.  Hash collisions are possible but
-*harmless*: a collision only merges the counts of two different
-continuations; verification rejects any wrong token (output equals greedy
-decoding bit-for-bit regardless).
+jit-compatible and split into two stages:
+
+  1. the O(L·(q+w)) *match/hash sweep* — compare the last q tokens against
+     every context position and fingerprint every w-token continuation.
+     This is the bandwidth-bound half and dispatches through
+     ``kernels/dispatch.ngram_sweep`` to either the Pallas VPU kernel
+     (``kernels/ngram_match.py``) or its XLA reference; both produce
+     bit-identical integers (shared hash: ``kernels/hashing.py``).
+  2. backend-independent *(count, recency) scoring + top-k* — occurrence
+     counts via sorted-hash range queries, recency tie-break via a
+     (count, position) lexicographic score, dedup by keeping the latest
+     occurrence of each continuation.  Pure integer math on the sweep
+     output, so drafts are provably identical under every backend.
+
+Hash collisions are possible but *harmless*: a collision only merges the
+counts of two different continuations; verification rejects any wrong token
+(output equals greedy decoding bit-for-bit regardless).
 """
 from __future__ import annotations
 
@@ -22,10 +33,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import dispatch
+from ..kernels.hashing import hash_rows as _hash_rows  # shared definition
 from .ngram_tables import NGramTables
-
-_HASH_MULT = jnp.uint32(2654435761)   # Knuth multiplicative hash
-_HASH_MIX = jnp.uint32(0x9E3779B9)
 
 
 # ----------------------------------------------------------------------------
@@ -67,30 +77,42 @@ def _gram_matrix(buf: jnp.ndarray, width: int) -> jnp.ndarray:
     return jnp.stack([buf[j:L - width + 1 + j] for j in range(width)], axis=-1)
 
 
-def _hash_rows(rows: jnp.ndarray) -> jnp.ndarray:
-    """Polynomial uint32 hash over the last axis."""
-    h = jnp.zeros(rows.shape[:-1], jnp.uint32)
-    for j in range(rows.shape[-1]):
-        h = (h ^ (rows[..., j].astype(jnp.uint32) * _HASH_MULT)) * _HASH_MIX + 1
-    return h
+def _extract_queries(buf: jnp.ndarray, cur_len: jnp.ndarray,
+                     q: int) -> jnp.ndarray:
+    """Last q committed tokens per row. buf: (B, L); cur_len: (B,) -> (B, q)."""
+    slc = lambda b, c: jax.lax.dynamic_slice(
+        b, (jnp.maximum(c - q, 0),), (q,))
+    return jax.vmap(slc)(buf, cur_len)
 
 
-def _context_draft_row(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
-                       k: int, w: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Single sequence. buf: (L,) int32; cur_len: () int32.
+def match_hash_sweep(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int, w: int,
+                     backend: str = "auto"
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stage 1: the O(L·(q+w)) sweep, dispatched to Pallas or XLA.
 
+    Returns (query (B,q), match (B,L) bool, hash (B,L) uint32); rows whose
+    cur_len < q get a garbage query but are invalidated by the scoring
+    stage's ``cur_len >= q+1`` guard.
+    """
+    query = _extract_queries(buf, cur_len, q)
+    match, h = dispatch.ngram_sweep(buf.astype(jnp.int32), query,
+                                    cur_len, w=w, backend=backend)
+    return query, match.astype(bool), h
+
+
+def _score_topk_row(bufp: jnp.ndarray, match: jnp.ndarray, h: jnp.ndarray,
+                    cur_len: jnp.ndarray, q: int, k: int, w: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage 2 (backend-independent): (count, recency) scoring + top-k.
+
+    bufp: (L + q + w,) int32 padded buffer; match: (L,) bool; h: (L,) uint32;
+    cur_len: () int32.  Pure integer math on the sweep output — identical
+    drafts whichever backend produced (match, h).
     Returns (drafts (k, w), valid (k,)).
     """
-    L = buf.shape[0]
-    width = q + w
-    grams = _gram_matrix(buf, width)                      # (N, width), N=L-width+1
-    N = grams.shape[0]
-    query = jax.lax.dynamic_slice(buf, (jnp.maximum(cur_len - q, 0),), (q,))
-    match = jnp.all(grams[:, :q] == query[None, :], axis=-1)
-    idx = jnp.arange(N)
-    match = match & (idx + width <= cur_len) & (cur_len >= q + 1)
-    conts = grams[:, q:]                                  # (N, w)
-    h = _hash_rows(conts)
+    L = match.shape[0]
+    idx = jnp.arange(L)
+    match = match & (cur_len >= q + 1)
     SENTINEL = jnp.uint32(0xFFFFFFFF)
     hm = jnp.where(match, h, SENTINEL)
     hs = jnp.sort(hm)
@@ -98,17 +120,14 @@ def _context_draft_row(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
     hi = jnp.searchsorted(hs, hm, side="right")
     counts = (hi - lo)                                    # occurrences
     # dedup: keep only the LATEST matching position of each continuation
-    # (recency also breaks count ties, per the paper)
-    later_same = jnp.zeros((N,), bool)
-    # position j is dominated if any j' > j has same hash and matches
-    # computed via a reverse cummax over (match ? idx : -1) per hash bucket —
-    # equivalently: j is representative iff idx == max idx among its bucket.
+    # (recency also breaks count ties, per the paper): position j is
+    # representative iff idx == max idx among its hash bucket, computed by
+    # a forward running-max over equal-hash runs + a backward propagation.
     max_idx_sorted = jnp.where(match, idx, -1)
-    # scatter-max over hash buckets using sort by hash
     order = jnp.argsort(hm)
     h_sorted = hm[order]
     i_sorted = max_idx_sorted[order]
-    # running max within equal-hash runs (left to right)
+
     def scan_fn(carry, x):
         prev_h, prev_m = carry
         hh, ii = x
@@ -116,44 +135,54 @@ def _context_draft_row(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
         return (hh, m), m
     _, run_max = jax.lax.scan(scan_fn, (SENTINEL ^ 1, jnp.int32(-1)),
                               (h_sorted, i_sorted), reverse=False)
+
     # propagate run max backwards (max of run is at run end): reverse scan
     def scan_back(carry, x):
         prev_h, prev_m = carry
         hh, mm = x
         m = jnp.where(hh == prev_h, jnp.maximum(prev_m, mm), mm)
         return (hh, m), m
-    _, bucket_max_sorted = jax.lax.scan(scan_back, (SENTINEL ^ 1, jnp.int32(-1)),
+    _, bucket_max_sorted = jax.lax.scan(scan_back,
+                                        (SENTINEL ^ 1, jnp.int32(-1)),
                                         (h_sorted, run_max), reverse=True)
-    bucket_max = jnp.zeros((N,), jnp.int32).at[order].set(bucket_max_sorted)
+    bucket_max = jnp.zeros((L,), jnp.int32).at[order].set(bucket_max_sorted)
     is_rep = match & (idx == bucket_max)
     # top-k by (count, recency), overflow-free: lexsort ascending by
     # (idx, count) with invalid rows pushed to the front, take the last k.
     cnt_key = jnp.where(is_rep, counts.astype(jnp.int32), -1)
     order2 = jnp.lexsort((idx, cnt_key))                  # ascending
     top_idx = order2[-k:][::-1]
-    drafts = conts[top_idx]                               # (k, w)
+    # gather the winning continuations: bufp[i+q : i+q+w] per winner
+    drafts = jnp.stack([jnp.take(bufp, top_idx + q + j) for j in range(w)],
+                       axis=-1)                           # (k, w)
     valid = cnt_key[top_idx] >= 0
     return drafts.astype(jnp.int32), valid
 
 
 def context_ngram_draft(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
-                        k: int, w: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                        k: int, w: int, backend: str = "auto"
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """buf: (B, L); cur_len: (B,). Returns (drafts (B,k,w), valid (B,k))."""
-    return jax.vmap(lambda b, c: _context_draft_row(b, c, q, k, w))(buf,
-                                                                    cur_len)
+    B = buf.shape[0]
+    _, match, h = match_hash_sweep(buf, cur_len, q, w, backend=backend)
+    pad = jnp.full((B, q + w), -1, jnp.int32)
+    bufp = jnp.concatenate([buf.astype(jnp.int32), pad], axis=1)
+    score = lambda bp, m, hh, c: _score_topk_row(bp, m, hh, c, q, k, w)
+    return jax.vmap(score)(bufp, match, h, cur_len.astype(jnp.int32))
 
 
 # ----------------------------------------------------------------------------
 # mixed strategy (paper §4.3)
 # ----------------------------------------------------------------------------
 def mixed_draft(tables: NGramTables, buf: jnp.ndarray, cur_len: jnp.ndarray,
-                last_token: jnp.ndarray, q: int, k: int, w: int
+                last_token: jnp.ndarray, q: int, k: int, w: int,
+                backend: str = "auto"
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Context N-gram matches first, extended model bigram fills the rest.
 
     Returns (drafts (B,k,w), valid (B,k), n_context (B,) — allocation stat).
     """
-    ctx_d, ctx_v = context_ngram_draft(buf, cur_len, q, k, w)
+    ctx_d, ctx_v = context_ngram_draft(buf, cur_len, q, k, w, backend=backend)
     big_d, _ = bigram_draft(tables, last_token, k, w)
     B = buf.shape[0]
     # compact the valid context drafts to the front, bigram after

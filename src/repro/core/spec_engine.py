@@ -41,6 +41,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import dispatch
 from ..models import cache as C
 from ..models import model as M
 from ..models.config import ModelConfig
@@ -58,6 +59,11 @@ class SpecConfig:
     strategy: str = "mixed"     # mixed | bigram | unigram | context | greedy
     max_new_tokens: int = 64
     eos_id: int = -1            # -1: never stop on eos
+    # drafter backend (kernels/dispatch.py): "xla" | "pallas" | "auto" —
+    # routes the context match/hash sweep to the Pallas kernel or XLA.
+    # (The verify call's backend is ModelConfig.backend: it lives in the
+    # model, not the drafter.)
+    backend: str = "auto"
 
 
 @functools.partial(
@@ -96,13 +102,15 @@ class DecodeState:
 
 def _draft(spec: SpecConfig, tables: NGramTables, buf, buf_len, last):
     if spec.strategy == "mixed":
-        return mixed_draft(tables, buf, buf_len, last, spec.q, spec.k, spec.w)
+        return mixed_draft(tables, buf, buf_len, last, spec.q, spec.k,
+                           spec.w, backend=spec.backend)
     if spec.strategy == "bigram":
         d, v = bigram_draft(tables, last, spec.k, spec.w)
     elif spec.strategy == "unigram":
         d, v = unigram_draft(tables, buf.shape[0], spec.k, spec.w)
     elif spec.strategy == "context":
-        d, v = context_ngram_draft(buf, buf_len, spec.q, spec.k, spec.w)
+        d, v = context_ngram_draft(buf, buf_len, spec.q, spec.k, spec.w,
+                                   backend=spec.backend)
         d = jnp.where(v[..., None], d, 0)
     else:
         raise ValueError(spec.strategy)
@@ -166,6 +174,12 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
                 jax.errors.TracerArrayConversionError):
             pass  # traced budgets: caller promises <= spec.max_new_tokens
     L = buf_size or P + cap + spec.w + 2
+    if (buf_size is None and dispatch.use_pallas(cfg.backend)
+            and dispatch.pallas_verify_supported(cfg)):
+        # size the cache so the verify kernel streams whole blocks and
+        # never repads per call (padded slots are masked by cur_len, so
+        # the extra length cannot change outputs)
+        L = dispatch.align_cache_len(L, cfg.kernel_block_s)
     eos = (jnp.full((B,), spec.eos_id, jnp.int32) if eos_id is None
            else jnp.broadcast_to(jnp.asarray(eos_id, jnp.int32), (B,)))
     model = M.init_state(cfg, B, L)

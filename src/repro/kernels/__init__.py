@@ -1,3 +1,5 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated in
-interpret mode on CPU; see tests/test_kernels_*)."""
-from . import ngram_match, ops, ref, spec_attention  # noqa: F401
+interpret mode on CPU; see tests/test_kernels_*).  Production code routes
+through ``dispatch`` (backend selection + alignment), never ``ops`` directly.
+"""
+from . import dispatch, hashing, ngram_match, ops, ref, spec_attention  # noqa: F401

@@ -1,0 +1,129 @@
+"""Kernel-dispatch layer: ONE switch between the Pallas fast path and XLA.
+
+Every hot-path consumer (``models/attention.py:attn_verify``,
+``core/drafters.py:context_ngram_draft``, the serving engine's buffer
+sizing) routes through this module instead of importing kernels directly,
+so backend selection, interpret-mode forcing and cache-length alignment are
+decided in exactly one place.
+
+Backend knob (``ModelConfig.backend`` for attention, ``SpecConfig.backend``
+for drafting): ``"xla" | "pallas" | "auto"``.
+
+  - ``"auto"``   — pallas on TPU, xla everywhere else (the production
+                   default: the kernels are written for the TPU memory
+                   hierarchy; on CPU the XLA paths are faster than
+                   interpret-mode emulation).
+  - ``"pallas"`` — always run the Pallas kernels.  Off-TPU this forces
+                   ``interpret=True`` (how the parity tests prove the
+                   kernels bit-compatible with the XLA paths on CPU).
+  - ``"xla"``    — always run the pure-XLA paths.
+
+Alignment: ``spec_attention_op`` streams the KV cache in ``block_s``-slot
+VMEM blocks and pads the cache up to a block multiple per call when the
+physical length does not divide — ``align_cache_len`` gives serving the
+buffer length at which that per-step repad never happens.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ops, ref
+
+BACKENDS = ("xla", "pallas", "auto")
+LANE = 128          # TPU lane width: last-dim tile of every VMEM block
+SUBLANE = 8         # f32 sublane width: second-to-last-dim tile
+
+
+def resolve_backend(backend: str) -> str:
+    """Map the config knob to a concrete backend ("xla" or "pallas")."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def use_pallas(backend: str) -> bool:
+    return resolve_backend(backend) == "pallas"
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run in interpret mode off-TPU (tests force this by
+    construction: CI has no TPU, so ``backend="pallas"`` == interpret)."""
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------------
+# buffer alignment (serving sizes its DecodeState through this)
+# ----------------------------------------------------------------------------
+def align_cache_len(n: int, block_s: int = 0) -> int:
+    """Smallest cache length >= n that ``spec_attention_op`` never repads.
+
+    A cache of S slots is streamed in blocks of ``min(block_s, S)``; padding
+    happens iff S does not divide into whole blocks.  Below one block the
+    kernel takes the cache as a single block, so only sublane alignment is
+    applied there.  ``block_s=0`` means the kernel default.
+    """
+    bs = block_s or ops.DEFAULT_BLOCK_S
+    if n >= bs:
+        return -(-n // bs) * bs
+    return -(-n // SUBLANE) * SUBLANE
+
+
+# ----------------------------------------------------------------------------
+# bifurcated verify attention
+# ----------------------------------------------------------------------------
+def pallas_verify_supported(cfg) -> bool:
+    """Kernel-eligibility for a ModelConfig: the Pallas verify kernel
+    implements the linear-cache, no-softcap contract; configs outside it
+    (Gemma softcap, Mixtral sliding-window ring cache) keep the XLA path
+    even under ``backend="pallas"``."""
+    return (cfg.attn_logit_softcap is None
+            and cfg.sliding_window is None)
+
+
+def verify_attention(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
+                     w1: int, block_s: int = 0) -> jnp.ndarray:
+    """Pallas bifurcated verify attention in the engine layout.
+
+    q: (B, K, W1, H, hd); caches (B, S, KV, hd); tails (B, K, W1, KV, hd);
+    cur_len (B,).  Returns (B, K, W1, H, hd).
+    """
+    bs = block_s if block_s else ops.DEFAULT_BLOCK_S
+    return ops.spec_attention_op(q, k_cache, v_cache, k_tail, v_tail,
+                                 cur_len, w1=w1, block_s=bs,
+                                 interpret=default_interpret())
+
+
+# ----------------------------------------------------------------------------
+# context N-gram match/hash sweep
+# ----------------------------------------------------------------------------
+def ngram_sweep(buf: jnp.ndarray, query: jnp.ndarray, cur_len: jnp.ndarray,
+                *, w: int, backend: str,
+                block_l: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backend-dispatched match/hash sweep over every context position.
+
+    buf: (B, L) int32; query: (B, q); cur_len: (B,).
+    Returns (match (B, L) int32, hash (B, L) uint32) where
+      match[b, i] = all(buf[b, i:i+q] == query[b]) and i + q + w <= cur_len
+      hash[b, i]  = hashing.hash_rows(buf[b, i+q : i+q+w])
+
+    Both backends produce bit-identical integers (property the scoring
+    stage in core/drafters.py relies on), so drafts cannot depend on the
+    backend.
+    """
+    bl = block_l if block_l else ops.DEFAULT_BLOCK_L
+    if use_pallas(backend):
+        return ops.ngram_match_op(buf, query, cur_len, w=w, block_l=bl,
+                                  interpret=default_interpret())
+    B, L = buf.shape
+    q = query.shape[1]
+    pad = jnp.full((B, q + w), -1, jnp.int32)
+    bufp = jnp.concatenate([buf.astype(jnp.int32), pad], axis=1)
+    fn = lambda b, qq, c: ref.ngram_match_ref(b, qq, c[None], w=w)
+    return jax.vmap(fn)(bufp, query.astype(jnp.int32),
+                        cur_len.astype(jnp.int32))

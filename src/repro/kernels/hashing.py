@@ -1,0 +1,38 @@
+"""The ONE definition of the context-N-gram continuation hash.
+
+Every component that fingerprints a w-token continuation — the Pallas match
+kernel (`ngram_match.py`), its pure-jnp oracle (`ref.py`) and the XLA
+drafter sweep (`core/drafters.py`) — must agree bit-for-bit on this hash, or
+the (count, recency) scoring stage would see different buckets per backend
+and the backend-parity guarantee (drafts identical under ``backend="xla"``
+and ``backend="pallas"``) would silently break.  They therefore all import
+the constants and the step function from here instead of redeclaring them.
+
+The hash is a Knuth-style multiplicative polynomial over uint32:
+
+    h_0 = 0;  h_{j+1} = (h_j ^ (tok_j * HASH_MULT)) * HASH_MIX + 1
+
+Collisions are possible but *harmless* for correctness: a collision only
+merges the occurrence counts of two different continuations; verification
+rejects any wrong token, so output still equals greedy decoding bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HASH_MULT = 2654435761        # Knuth multiplicative hash
+HASH_MIX = 0x9E3779B9         # golden-ratio odd constant
+
+
+def hash_step(h: jnp.ndarray, tok: jnp.ndarray) -> jnp.ndarray:
+    """One token folded into the running hash. h: uint32; tok: any int."""
+    return (h ^ (tok.astype(jnp.uint32) * jnp.uint32(HASH_MULT))) \
+        * jnp.uint32(HASH_MIX) + 1
+
+
+def hash_rows(rows: jnp.ndarray) -> jnp.ndarray:
+    """Hash over the last axis of ``rows`` (..., w) -> (...) uint32."""
+    h = jnp.zeros(rows.shape[:-1], jnp.uint32)
+    for j in range(rows.shape[-1]):
+        h = hash_step(h, rows[..., j])
+    return h

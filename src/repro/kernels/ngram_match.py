@@ -20,9 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .hashing import hash_step
+
 DEFAULT_BLOCK_L = 1024
-_HASH_MULT = 2654435761
-_HASH_MIX = 0x9E3779B9
 
 
 def _kernel(cur_len_ref, buf_ref, query_ref, match_ref, hash_ref, *,
@@ -41,9 +41,8 @@ def _kernel(cur_len_ref, buf_ref, query_ref, match_ref, hash_ref, *,
 
     h = jnp.zeros((block_l,), jnp.uint32)
     for j in range(w):
-        tok = pl.load(buf_ref, (pl.ds(base + q + j, block_l),)
-                      ).astype(jnp.uint32)
-        h = (h ^ (tok * jnp.uint32(_HASH_MULT))) * jnp.uint32(_HASH_MIX) + 1
+        tok = pl.load(buf_ref, (pl.ds(base + q + j, block_l),))
+        h = hash_step(h, tok)
     match_ref[...] = match.astype(jnp.int32)
     hash_ref[...] = h
 

@@ -1,10 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
-These handle layout/padding (TPU alignment: hd and cache blocks to multiples
-of 128, query rows to multiples of 8), dispatch between kernel and reference
-paths, and batching.  On this CPU container the kernels run with
-``interpret=True``; on a real TPU set ``interpret=False`` (the default picks
-by backend).
+These handle layout transposition, cache/block padding and batching only;
+backend SELECTION (xla vs pallas, interpret forcing, eligibility) lives one
+level up in ``kernels/dispatch.py``, which is what production code calls.
+On this CPU container the kernels run with ``interpret=True``; on a real
+TPU the default resolves to ``interpret=False``.
 """
 from __future__ import annotations
 
@@ -49,10 +49,12 @@ def spec_attention_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
     vc = v_cache.transpose(0, 2, 1, 3)
     kt = k_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
     vt = v_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
-    bs = min(block_s, S) if S % min(block_s, S) == 0 else S
+    bs = min(block_s, S)
     kc, S0 = _pad_to(kc, 2, bs)
     vc, _ = _pad_to(vc, 2, bs)
     # padded cache slots have slot >= S0 >= cur_len -> masked by cur_len test
+    # (serving avoids the per-call repad by sizing its buffers through
+    # dispatch.align_cache_len; arbitrary lengths stay correct here)
     out = spec_attention_call(qk, kc, vc, kt, vt, cur_len.astype(jnp.int32),
                               w1=W1, block_s=bs, interpret=interpret)
     return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
@@ -84,13 +86,15 @@ def ngram_match_op(buf, query, cur_len, *, w: int,
         interpret = _default_interpret()
     B, L = buf.shape
     q = query.shape[1]
-    bl = min(block_l, L) if L % min(block_l, L) == 0 else L
-    pad = jnp.full((B, q + w), -1, jnp.int32)
-    bufp = jnp.concatenate([buf.astype(jnp.int32), pad], axis=1)
+    bl = min(block_l, L)
+    Lp = -(-L // bl) * bl           # pad positions to whole blocks; padded
+    pad = jnp.full((B, Lp - L + q + w), -1, jnp.int32)   # slots can never
+    bufp = jnp.concatenate([buf.astype(jnp.int32), pad], axis=1)  # match
     fn = lambda b, qq, c: ngram_match_call(b, qq, c[None], w=w, block_l=bl,
                                            interpret=interpret)
-    return jax.vmap(fn)(bufp, query.astype(jnp.int32),
+    m, h = jax.vmap(fn)(bufp, query.astype(jnp.int32),
                         cur_len.astype(jnp.int32))
+    return m[:, :L], h[:, :L]
 
 
 @functools.partial(jax.jit,

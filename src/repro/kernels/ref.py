@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .hashing import hash_step
+
 
 def spec_attention_ref(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
                        w1: int) -> jnp.ndarray:
@@ -48,8 +50,7 @@ def ngram_match_ref(buf_padded: jnp.ndarray, query: jnp.ndarray,
     match = match & (pos + q + w <= cur_len[0])
     h = jnp.zeros((L,), jnp.uint32)
     for j in range(w):
-        tok = buf_padded[q + j:q + j + L].astype(jnp.uint32)
-        h = (h ^ (tok * jnp.uint32(2654435761))) * jnp.uint32(0x9E3779B9) + 1
+        h = hash_step(h, buf_padded[q + j:q + j + L])
     return match.astype(jnp.int32), h
 
 

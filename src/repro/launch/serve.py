@@ -34,13 +34,20 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="serve with slot-level continuous batching instead "
                          "of static batches")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="kernel-dispatch backend (kernels/dispatch.py): "
+                         "auto = pallas on TPU, xla elsewhere; pallas "
+                         "off-TPU runs in interpret mode (slow, parity "
+                         "checking only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch}: encoder-only arch has no decode loop")
     import dataclasses
-    cfg = dataclasses.replace(cfg, vocab_size=max(cfg.vocab_size, 259))
+    cfg = dataclasses.replace(cfg, vocab_size=max(cfg.vocab_size, 259),
+                              backend=args.backend)
     ts = init_train_state(jax.random.PRNGKey(0), cfg)
     params = ts["params"]
     if args.ckpt:
@@ -58,7 +65,7 @@ def main() -> None:
         print(f"  final loss {float(m['loss']):.3f}")
 
     spec = SpecConfig(k=args.k, w=args.w, strategy=args.strategy,
-                      max_new_tokens=args.max_new)
+                      max_new_tokens=args.max_new, backend=args.backend)
     eng = ServingEngine(params, cfg, spec, max_batch=args.n_prompts,
                         max_new_cap=args.max_new)
     for prompt, _ in make_prompts(args.task, args.n_prompts):

@@ -214,47 +214,27 @@ def attn_full(params: Params, x: jnp.ndarray, cfg: ModelConfig,
     return y, (k, v)
 
 
-def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
-                positions: jnp.ndarray,
-                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
-                cache_pos: jnp.ndarray,
-                use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                                   jnp.ndarray]:
-    """Bifurcated batched-speculation attention (the paper's verification).
+def _verify_attention_xla(q, k_cache, v_cache, k_tail, v_tail, cache_pos,
+                          pos2d, cfg: ModelConfig) -> jnp.ndarray:
+    """XLA backend of the bifurcated verify attention.
 
-    x: (B, k, w1, d) — k speculative rows per sequence.  Each row attends to
-    the SHARED context cache (read once, not k times — beyond-paper
-    optimisation, see DESIGN.md §3) plus its own (w1)-token tail, causally,
-    with no cross-row attention.
+    q: (B,K,W1,H,hd); caches (B,S,KV,hd); tails (B,K,W1,KV,hd);
+    cache_pos: (B,S) absolute position per slot (-1 = empty, ring-aware);
+    pos2d: (B,W1) query positions.  Returns (B,K,W1,H,hd) f32.
 
-    positions: (B, w1) or (3, B, w1) — identical for all k rows.
-    Returns (y (B,k,w1,d), k_new, v_new (B,k,w1,KV,hd)).
+    This is the fully-general path (softcap, sliding-window ring caches,
+    sharded context logits); the Pallas backend covers the linear-cache
+    subset via kernels/dispatch.verify_attention.
     """
-    B, K, W1, d = x.shape
-    hd = cfg.resolved_head_dim
-    cd = cfg.compute_dtype
-    freqs = rope_freqs(cfg, positions) if cfg.rope != "none" else None
-    xf = x.reshape(B * K, W1, d).astype(cd)
-    fr = None
-    if freqs is not None:
-        fr = jnp.repeat(freqs, K, axis=0)  # (B*K, w1, rd/2)
-    q = (xf @ params["wq"].astype(cd)).reshape(B * K, W1, cfg.num_heads, hd)
-    k_new = (xf @ params["wk"].astype(cd)).reshape(B * K, W1,
-                                                   cfg.num_kv_heads, hd)
-    v_new = (xf @ params["wv"].astype(cd)).reshape(B * K, W1,
-                                                   cfg.num_kv_heads, hd)
-    if cfg.rope != "none":
-        q = apply_rope(q, fr, cfg)
-        k_new = apply_rope(k_new, fr, cfg)
-    KV = cfg.num_kv_heads
-    G = cfg.num_heads // KV
+    B, K, W1, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
     qg = q.reshape(B, K, W1, KV, G, hd).astype(jnp.float32)
-    kn = k_new.reshape(B, K, W1, KV, hd).astype(jnp.float32)
-    vn = v_new.reshape(B, K, W1, KV, hd).astype(jnp.float32)
+    kn = k_tail.astype(jnp.float32)
+    vn = v_tail.astype(jnp.float32)
     kc = k_cache.astype(jnp.float32)
     vc = v_cache.astype(jnp.float32)
     scale = 1.0 / (hd ** 0.5)
-    pos2d = positions[0] if positions.ndim == 3 else positions  # (B, w1)
     # context logits: shared cache read once per sequence
     lc = jnp.einsum("bkwnGh,bsnh->bknGws", qg, kc) * scale
     from ..distributed import act_sharding
@@ -284,9 +264,72 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
            + jnp.einsum("bknGwv,bkvnh->bkwnGh", e_l, vn))
     out = act_sharding.constrain(out, "ctx_out")
     out = out / jnp.moveaxis(denom, -1, 2)[..., None]
+    return out.reshape(B, K, W1, H, hd)
+
+
+def _use_verify_kernel(cfg: ModelConfig, cur_len) -> bool:
+    """Route to the Pallas kernel iff the backend resolves to pallas, the
+    config is inside the kernel's contract (linear cache, no softcap) and
+    the caller supplied the scalar-prefetch cur_len.  The mesh-sharded XLA
+    path keeps its own flash-decode partitioning, so an installed
+    activation-sharder also pins the XLA backend."""
+    from ..distributed import act_sharding
+    from ..kernels import dispatch
+    return (cur_len is not None
+            and dispatch.use_pallas(cfg.backend)
+            and dispatch.pallas_verify_supported(cfg)
+            and not act_sharding.installed())
+
+
+def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                cache_pos: jnp.ndarray,
+                cur_len: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bifurcated batched-speculation attention (the paper's verification).
+
+    x: (B, k, w1, d) — k speculative rows per sequence.  Each row attends to
+    the SHARED context cache (read once, not k times — beyond-paper
+    optimisation, see DESIGN.md §3) plus its own (w1)-token tail, causally,
+    with no cross-row attention.
+
+    positions: (B, w1) or (3, B, w1) — identical for all k rows.
+    cur_len: (B,) committed cache length (linear caches); enables the Pallas
+    backend (kernels/dispatch.py) when ``cfg.backend`` resolves to pallas.
+    Returns (y (B,k,w1,d), k_new, v_new (B,k,w1,KV,hd)).
+    """
+    B, K, W1, d = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    freqs = rope_freqs(cfg, positions) if cfg.rope != "none" else None
+    xf = x.reshape(B * K, W1, d).astype(cd)
+    fr = None
+    if freqs is not None:
+        fr = jnp.repeat(freqs, K, axis=0)  # (B*K, w1, rd/2)
+    q = (xf @ params["wq"].astype(cd)).reshape(B * K, W1, cfg.num_heads, hd)
+    k_new = (xf @ params["wk"].astype(cd)).reshape(B * K, W1,
+                                                   cfg.num_kv_heads, hd)
+    v_new = (xf @ params["wv"].astype(cd)).reshape(B * K, W1,
+                                                   cfg.num_kv_heads, hd)
+    if cfg.rope != "none":
+        q = apply_rope(q, fr, cfg)
+        k_new = apply_rope(k_new, fr, cfg)
+    KV = cfg.num_kv_heads
+    qk = q.reshape(B, K, W1, cfg.num_heads, hd)
+    kn = k_new.reshape(B, K, W1, KV, hd)
+    vn = v_new.reshape(B, K, W1, KV, hd)
+    pos2d = positions[0] if positions.ndim == 3 else positions  # (B, w1)
+    if _use_verify_kernel(cfg, cur_len):
+        from ..kernels import dispatch
+        out = dispatch.verify_attention(qk, k_cache, v_cache, kn, vn,
+                                        cur_len, w1=W1,
+                                        block_s=cfg.kernel_block_s)
+    else:
+        out = _verify_attention_xla(qk, k_cache, v_cache, kn, vn, cache_pos,
+                                    pos2d, cfg)
     out = out.reshape(B, K, W1, cfg.num_heads * hd).astype(cd)
     y = out @ params["wo"].astype(cd)
-    return y, kn.astype(cd).reshape(B, K, W1, KV, hd), \
-        vn.astype(cd).reshape(B, K, W1, KV, hd)
+    return y, kn, vn
 
 

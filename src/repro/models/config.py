@@ -75,6 +75,15 @@ class ModelConfig:
     sliding_window: Optional[int] = None  # Mixtral: 4096
     attn_logit_softcap: Optional[float] = None
 
+    # Kernel dispatch (kernels/dispatch.py): "xla" | "pallas" | "auto".
+    # "auto" resolves to pallas on TPU and xla elsewhere; "pallas" off-TPU
+    # runs the kernels in interpret mode (the parity-test configuration).
+    backend: str = "auto"
+    # Cache block (sequence slots per VMEM block) for the Pallas verify
+    # kernel; 0 = kernel default (512).  Serving aligns its DecodeState
+    # buffers to this so the kernel never repads per step.
+    kernel_block_s: int = 0
+
     # MoE
     num_experts: int = 0
     num_experts_per_tok: int = 2
@@ -147,6 +156,7 @@ class ModelConfig:
 
     def validate(self) -> "ModelConfig":
         assert self.num_heads % self.num_kv_heads == 0, self.name
+        assert self.backend in ("xla", "pallas", "auto"), self.backend
         _ = self.num_periods
         for b in tuple(self.prefix_blocks) + tuple(self.block_pattern):
             assert b.mixer in (ATTN, MAMBA, MLSTM, SLSTM), b

@@ -117,6 +117,7 @@ def decode(params: Params, cfg: ModelConfig, state: State,
     if gid0 is not None:
         ctx["cache_pos"] = key_positions(cfg, S, cur)   # pre-write owners
         ctx["slots"] = write_slots(cfg, S, cur, T)
+        ctx["cur_len"] = cur        # scalar-prefetch operand (Pallas backend)
     mode = "decode"
     if n_commit is not None:
         mode = "replay"
@@ -149,6 +150,7 @@ def verify(params: Params, cfg: ModelConfig, state: State,
     if gid0 is not None:
         S = state["groups"][gid0]["k"].shape[2]
         ctx["cache_pos"] = key_positions(cfg, S, cur)
+        ctx["cur_len"] = cur        # scalar-prefetch operand (Pallas backend)
     x = _embed(params, cfg, tokens.reshape(B * K, W1), None)
     x, kv_tails, _ = run_stack(params, cfg, x, "verify", state, ctx)
     x = apply_norm(params["final_norm"], x, cfg)

@@ -103,7 +103,8 @@ def _apply_block(bp: Params, x: jnp.ndarray, cfg: ModelConfig,
             B, T = h.shape[:2]
             y, k_t, v_t = attn_verify(bp["mixer"], h[:, None], cfg,
                                       ctx["positions"], gst["k"], gst["v"],
-                                      ctx["cache_pos"])
+                                      ctx["cache_pos"],
+                                      cur_len=ctx.get("cur_len"))
             y = y[:, 0]
             kc, vc = kv_write(gst["k"], gst["v"], k_t[:, 0], v_t[:, 0],
                               ctx["slots"], gate=ctx.get("gate"))
@@ -112,7 +113,8 @@ def _apply_block(bp: Params, x: jnp.ndarray, cfg: ModelConfig,
             B = gst["k"].shape[0]
             hv = h.reshape(B, K, h.shape[-2], h.shape[-1])
             y, k_t, v_t = attn_verify(bp["mixer"], hv, cfg, ctx["positions"],
-                                      gst["k"], gst["v"], ctx["cache_pos"])
+                                      gst["k"], gst["v"], ctx["cache_pos"],
+                                      cur_len=ctx.get("cur_len"))
             y = y.reshape(x.shape)
             new_gst = {"k_tail": k_t, "v_tail": v_t}
         else:

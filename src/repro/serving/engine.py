@@ -31,6 +31,7 @@ from ..core.spec_engine import (DecodeState, SpecConfig, admit_slot,
                                 empty_decode_state, generate, release_slot,
                                 spec_step)
 from ..data.tokenizer import ByteTokenizer
+from ..kernels import dispatch
 from ..models import model as M
 from ..models.config import ModelConfig
 from .scheduler import DEFAULT_BUCKETS, Batch, Request, Scheduler, SlotMap
@@ -43,11 +44,14 @@ class ServingEngine:
                  max_batch: int = 8,
                  adaptive: bool = False,
                  buckets: Optional[Tuple[int, ...]] = None,
-                 max_new_cap: int = 64):
+                 max_new_cap: int = 64,
+                 bucket_align: Optional[int] = None):
         """``adaptive``: pick (k, w) per batch with the UCB controller
         (core/controller.py, beyond-paper) instead of a static setting.
         ``buckets``/``max_new_cap`` bound the continuous-batching DecodeState
-        (buffer length = largest bucket + max_new_cap + w + 2)."""
+        (buffer length = largest bucket + max_new_cap + w + 2).
+        ``bucket_align``: bucket-boundary multiple; None = lane-aligned when
+        the Pallas backend is active, else 1 (kernels/dispatch.py)."""
         self.params = params
         self.cfg = cfg
         self.spec = spec or SpecConfig(strategy="greedy")
@@ -55,9 +59,18 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_new_cap = max_new_cap
         self._explicit_buckets = buckets is not None
+        # when the verify kernel is live, size every static length (bucket
+        # ladder, continuous DecodeState buffer) to kernel-friendly
+        # multiples so spec_attention_op never repads the cache per step
+        self._kernel_aligned = (
+            dispatch.use_pallas(cfg.backend)
+            and dispatch.pallas_verify_supported(cfg))
+        if bucket_align is None:
+            bucket_align = dispatch.LANE if self._kernel_aligned else 1
         self.scheduler = Scheduler(
             max_batch=max_batch,
-            buckets=buckets if buckets is not None else DEFAULT_BUCKETS)
+            buckets=buckets if buckets is not None else DEFAULT_BUCKETS,
+            align=bucket_align)
         self.controller = None
         if adaptive:
             from ..core.controller import AdaptiveKW
@@ -174,6 +187,9 @@ class ServingEngine:
             prompt_cap = self.scheduler.max_queued_bucket() or prompt_cap
         self._cont_prompt_cap = prompt_cap
         buf_size = prompt_cap + self.max_new_cap + self.spec.w + 2
+        if self._kernel_aligned:
+            buf_size = dispatch.align_cache_len(buf_size,
+                                                self.cfg.kernel_block_s)
         self._cont_state = empty_decode_state(self.cfg, self.spec,
                                               self.max_batch, buf_size)
         self._slots = SlotMap(self.max_batch)

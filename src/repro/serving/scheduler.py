@@ -54,12 +54,21 @@ def fit_bucket(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS) -> int:
 
 
 class Scheduler:
-    """FIFO with length bucketing."""
+    """FIFO with length bucketing.
+
+    ``align`` rounds every bucket boundary up to a multiple (the engine
+    passes the TPU lane width when the Pallas backend is active, so prefill
+    blocks and the cache lengths derived from the bucket ladder land on
+    kernel-friendly tiles; 1 = keep the ladder as given).
+    """
 
     def __init__(self, max_batch: int = 8,
-                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS):
+                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                 align: int = 1):
         self.max_batch = max_batch
-        self.buckets = tuple(sorted(buckets))
+        self.align = max(1, align)
+        self.buckets = tuple(sorted({-(-b // self.align) * self.align
+                                     for b in buckets}))
         self.tok = ByteTokenizer()
         self._queue: List[Tuple[Request, List[int]]] = []
 

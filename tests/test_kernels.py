@@ -6,7 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
-pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
+# deliberately NOT marked slow: op-level interpret-mode checks run in
+# seconds, and the CI backend-parity lane gates PRs on exactly this file
 
 
 def _mk(seed, shape, dtype):
