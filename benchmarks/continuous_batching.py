@@ -12,7 +12,17 @@ batching admits/retires between jitted spec_steps.  Reported per mode:
 Writes ``BENCH_continuous.json`` (repo root) so future PRs can track serving
 throughput, and prints one CSV row per mode.
 
+``--paged`` runs the PAGED long-context arrival mix instead (DESIGN.md §8):
+mostly short prompts with periodic long-context ones, served by (a) linear
+continuous batching, where every slot pays the long bucket's worst-case
+buffer, and (b) paged continuous batching over a pool deliberately SMALLER
+than that worst case (admission defers when exhausted).  Reported per mode:
+throughput + latency as above, plus resident KV in token-positions per
+layer (linear: max_batch * buf_size, always; paged: peak pages * page
+size), deferral count and the leak check.  Writes ``BENCH_paged.json``.
+
 Run:  PYTHONPATH=src python -m benchmarks.continuous_batching [--n 24]
+      PYTHONPATH=src python -m benchmarks.continuous_batching --paged
 """
 from __future__ import annotations
 
@@ -110,6 +120,100 @@ def run_continuous(eng, workload) -> Dict:
     return _summary(latency, toks, busy)
 
 
+# ---------------------------------------------------------------------------
+# paged long-context mix (--paged): BENCH_paged.json
+# ---------------------------------------------------------------------------
+PAGED_BUCKETS = (64, 256)        # short bucket + the long-context bucket
+PAGED_PAGE_SIZE = 32
+LONG_EVERY = 5                   # every 5th arrival is long-context
+
+
+def make_longctx_workload(n: int, rate_hz: float, seed: int = 0
+                          ) -> List[Tuple[str, int, float]]:
+    """Arrival mix where every LONG_EVERY-th request needs the long bucket
+    (the rest fit the short one) — the admission pattern paged serving is
+    for: shorts must keep flowing around the page-hungry requests."""
+    rng = np.random.default_rng(seed)
+    texts = [p for p, _ in make_prompts("code", n, seed=1)]
+    gaps = rng.exponential(1.0 / rate_hz, n)
+    arrivals = np.cumsum(gaps)
+    out = []
+    for i in range(n):
+        text = texts[i % len(texts)]
+        if i % LONG_EVERY == 2:                              # long-context
+            text = ((text + " ") * 40)[:PAGED_BUCKETS[-1] - 1]
+        else:
+            text = text[:PAGED_BUCKETS[0] - 1]
+        # -1: ByteTokenizer prepends BOS, and the engine rejects raw token
+        # counts beyond the largest bucket (that rejection path has its own
+        # test; here every request must actually run)
+        out.append((text, int(rng.choice(MAX_NEW_CHOICES)),
+                    float(arrivals[i])))
+    return out
+
+
+def run_paged(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
+              seed: int = 0) -> Dict:
+    ensure_dirs()
+    cfg, params = get_trained()
+    tables = get_tables(cfg, params, k_max=16, w_max=10)
+    cap = max(MAX_NEW_CHOICES)
+    spec = SpecConfig(k=8, w=8, strategy="mixed", max_new_tokens=cap)
+    ps = PAGED_PAGE_SIZE
+    # linear worst case: every slot carries the long bucket's buffer
+    buf_tokens = PAGED_BUCKETS[-1] + cap + spec.w + 2
+    linear_equiv_pages = max_batch * (-(-buf_tokens // ps))
+    num_pages = int(linear_equiv_pages * 0.6)    # the pool linear can't match
+
+    def make_engine(paged: bool):
+        return ServingEngine(params, cfg, spec, tables=tables,
+                             max_batch=max_batch, buckets=PAGED_BUCKETS,
+                             max_new_cap=cap, paged=paged,
+                             num_pages=num_pages if paged else None,
+                             page_size=ps)
+
+    res = {"workload": {"n": n, "rate_hz": rate_hz, "seed": seed,
+                        "max_batch": max_batch,
+                        "buckets": list(PAGED_BUCKETS),
+                        "long_every": LONG_EVERY, "page_size": ps,
+                        "num_pages": num_pages,
+                        "linear_equiv_pages": linear_equiv_pages,
+                        "spec": {"k": spec.k, "w": spec.w,
+                                 "strategy": spec.strategy}}}
+    for mode in ("linear", "paged"):
+        eng = make_engine(paged=(mode == "paged"))
+        for text in ("warmup", "w" * (PAGED_BUCKETS[-1] - 1)):  # both buckets
+            for mnt in MAX_NEW_CHOICES:
+                eng.submit(text, max_new_tokens=mnt)
+            eng.serve_continuous()
+        if mode == "paged":
+            eng.reset_pool_counters()   # peak/deferrals measure the
+                                        # workload, not the warmup
+        summary = run_continuous(eng, make_longctx_workload(n, rate_hz,
+                                                            seed))
+        if mode == "paged":
+            pool = eng.pool_stats()
+            assert pool["free_pages"] == pool["num_pages"], (
+                f"leaked pages: {pool}")
+            assert pool["rejected"] == 0, (
+                f"workload must fit the buckets, got rejections: {pool}")
+            summary.update(
+                peak_kv_tokens=pool["peak_pages"] * ps,
+                pool_pages=pool["num_pages"],
+                peak_pages=pool["peak_pages"],
+                admission_deferrals=pool["deferrals"],
+                rejected=pool["rejected"],
+                leaked_pages=pool["num_pages"] - pool["free_pages"])
+        else:
+            # linear residency is static: every slot, whole buffer, always
+            summary.update(
+                peak_kv_tokens=max_batch * eng._cont_state.buf_size)
+        res[mode] = summary
+    with open("BENCH_paged.json", "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
 def run(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
         seed: int = 0) -> Dict:
     ensure_dirs()
@@ -156,7 +260,21 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="run the paged long-context arrival mix and write "
+                         "BENCH_paged.json (linear vs paged KV layouts)")
     args = ap.parse_args()
+    if args.paged:
+        res = run_paged(args.n, args.rate, args.max_batch, args.seed)
+        print("mode,throughput_tok_s,p50_latency_s,p99_latency_s,"
+              "peak_kv_tokens,admission_deferrals")
+        for mode in ("linear", "paged"):
+            r = res[mode]
+            print(f"{mode},{r['throughput_tok_s']},{r['p50_latency_s']},"
+                  f"{r['p99_latency_s']},{r['peak_kv_tokens']},"
+                  f"{r.get('admission_deferrals', 0)}")
+        print("wrote BENCH_paged.json")
+        return
     res = run(args.n, args.rate, args.max_batch, args.seed)
     print("mode,throughput_tok_s,p50_latency_s,p99_latency_s")
     for mode in ("static", "continuous"):

@@ -77,3 +77,15 @@ toks = sum(r.stats["new_tokens"] for r in done)
 print(f"{'continuous':12s}: {len(done)} requests, {calls} total calls, "
       f"{toks / max(calls, 1):.2f} tokens/call, wall {dt:.1f}s "
       f"(staggered arrivals, per-request budgets)")
+
+# --- paged KV: same serving loop, slots share a page pool (DESIGN.md §8) --
+paged_eng = ServingEngine(ts["params"], cfg,
+                          SpecConfig(k=10, w=10, strategy="mixed"),
+                          tables=mixed_eng.tables,
+                          max_batch=4, max_new_cap=64, paged=True)
+for p in prompts[: args.requests // 2]:
+    paged_eng.submit(p, max_new_tokens=32)
+done_p = paged_eng.serve_continuous()
+toks_p = sum(r.stats["new_tokens"] for r in done_p)
+print(f"{'paged':12s}: {len(done_p)} requests, {toks_p} tokens, "
+      f"pool {paged_eng.pool_stats()}")

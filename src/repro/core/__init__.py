@@ -1,6 +1,6 @@
 """The paper's primary contribution: learning-free batched speculation."""
 from . import drafters, ngram_tables, phase, spec_engine, verify  # noqa: F401
 from .ngram_tables import NGramTables, build_bigram, build_unigram  # noqa: F401
-from .spec_engine import (DecodeState, SpecConfig, admit_slot,  # noqa: F401
-                          empty_decode_state, generate, init_decode_state,
-                          release_slot, spec_step)
+from .spec_engine import (DecodeState, PagedConfig, SpecConfig,  # noqa: F401
+                          admit_slot, empty_decode_state, generate,
+                          init_decode_state, release_slot, spec_step)

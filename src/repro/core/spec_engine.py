@@ -52,6 +52,23 @@ from .verify import accept
 
 
 @dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    """Sizing of a paged DecodeState (models/cache.py, DESIGN.md §8).
+
+    ``num_pages`` is the page-pool size shared by every slot; 0 sizes it to
+    the per-slot worst case (num_slots * pages_per_slot — the linear
+    footprint, useful for parity testing).  ``page_size`` is positions per
+    page; 0 follows the verify kernel's cache block (cfg.kernel_block_s or
+    the kernel default), which keeps the paged Pallas grid page-aligned.
+    """
+    num_pages: int = 0
+    page_size: int = 0
+
+    def resolve_page_size(self, cfg: ModelConfig) -> int:
+        return self.page_size or C.default_page_size(cfg)
+
+
+@dataclasses.dataclass(frozen=True)
 class SpecConfig:
     k: int = 10                 # number of batched drafts
     w: int = 10                 # speculation depth
@@ -135,9 +152,23 @@ def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
 # state construction / slot admission
 # ---------------------------------------------------------------------------
 def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
-                       buf_size: int) -> DecodeState:
-    """All-slots-free state for a continuous-batching engine."""
+                       buf_size: int,
+                       paged: Optional[PagedConfig] = None) -> DecodeState:
+    """All-slots-free state for a continuous-batching engine.
+
+    With ``paged``, the model cache is a shared page pool + per-slot page
+    tables instead of per-slot linear buffers; ``buf_size`` (the token
+    buffer / logical KV capacity per slot) is rounded up to whole pages.
+    """
     B = num_slots
+    if paged is not None:
+        ps = paged.resolve_page_size(cfg)
+        buf_size = -(-buf_size // ps) * ps
+        pps = buf_size // ps
+        model = C.init_paged_state(cfg, B, paged.num_pages or B * pps,
+                                   ps, pps)
+    else:
+        model = M.init_state(cfg, B, buf_size)
     return DecodeState(
         buf=jnp.zeros((B, buf_size), jnp.int32),
         buf_len=jnp.zeros((B,), jnp.int32),
@@ -146,7 +177,7 @@ def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
         eos_id=jnp.full((B,), -1, jnp.int32),
         done=jnp.ones((B,), bool),
         active=jnp.zeros((B,), bool),
-        model=M.init_state(cfg, B, buf_size),
+        model=model,
         stats=_init_stats(spec, B))
 
 
@@ -154,12 +185,19 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
                       prompt: jnp.ndarray,
                       max_new_tokens: Optional[jnp.ndarray] = None,
                       eos_id: Optional[jnp.ndarray] = None,
-                      buf_size: Optional[int] = None) -> DecodeState:
+                      buf_size: Optional[int] = None,
+                      paged: Optional[PagedConfig] = None) -> DecodeState:
     """Prefill every row of ``prompt`` (B, P) into a fresh DecodeState.
 
     The static buffer is sized by spec.max_new_tokens (grown to cover
     concrete per-row ``max_new_tokens``; traced budgets must not exceed
     spec.max_new_tokens) unless ``buf_size`` is given.
+
+    ``paged`` switches the KV layout to the shared page pool: each row gets
+    ceil(P / page_size) pages up front and grows on the fly inside
+    spec_step.  The default pool covers the worst case, so one-shot
+    ``generate`` can never exhaust it — pool pressure is a serving concern
+    (ServingEngine's page-reservation admission).
     """
     B, P = prompt.shape
     budget = (jnp.full((B,), spec.max_new_tokens, jnp.int32)
@@ -182,7 +220,16 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
         L = dispatch.align_cache_len(L, cfg.kernel_block_s)
     eos = (jnp.full((B,), spec.eos_id, jnp.int32) if eos_id is None
            else jnp.broadcast_to(jnp.asarray(eos_id, jnp.int32), (B,)))
-    model = M.init_state(cfg, B, L)
+    if paged is not None:
+        ps = paged.resolve_page_size(cfg)
+        L = -(-L // ps) * ps
+        pps = L // ps
+        model = C.init_paged_state(cfg, B, paged.num_pages or B * pps,
+                                   ps, pps)
+        model = C.grow_pages(model, jnp.full((B,), P, jnp.int32),
+                             jnp.ones((B,), bool))
+    else:
+        model = M.init_state(cfg, B, L)
     buf = jnp.zeros((B, L), jnp.int32)
     buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
 
@@ -215,10 +262,17 @@ def admit_slot(params, cfg: ModelConfig, state: DecodeState,
     prompt length P — the scheduler's length bucketing keeps that bounded.
     ``slot``/``max_new_tokens``/``eos_id`` are traced, so heterogeneous
     requests reuse the same executable.
+
+    Paged states prefill the row into a P-sized scratch linear cache, then
+    allocate ceil(P / page_size) pool pages for the slot and scatter the
+    prefix KV through its fresh page table (spec_step grows further pages on
+    the fly).  A defensive free first makes admission safe even if release
+    was skipped — free_slot_pages is idempotent.
     """
     P = prompt.shape[0]
     L = state.buf_size
-    row_model = M.init_state(cfg, 1, L)
+    paged = C.is_paged(state.model)
+    row_model = M.init_state(cfg, 1, P if paged else L)
     logits, row_model = M.prefill(params, cfg, row_model,
                                   tokens=prompt[None].astype(jnp.int32),
                                   last_only=True)
@@ -228,6 +282,13 @@ def admit_slot(params, cfg: ModelConfig, state: DecodeState,
     row = row.at[P].set(first)
     stats = {k: v.at[slot].set(0) for k, v in state.stats.items()}
     stats["tokens"] = stats["tokens"].at[slot].set(1)
+    if paged:
+        ps = C.paged_dims(state.model)[1]
+        model = C.free_slot_pages(state.model, slot)
+        model = C.alloc_slot_pages(model, slot, C.pages_for_len(P, ps))
+        model = C.insert_slot_paged(model, row_model, slot, P)
+    else:
+        model = C.insert_slot(state.model, row_model, slot)
     return DecodeState(
         buf=state.buf.at[slot].set(row),
         buf_len=state.buf_len.at[slot].set(P + 1),
@@ -236,16 +297,22 @@ def admit_slot(params, cfg: ModelConfig, state: DecodeState,
         eos_id=state.eos_id.at[slot].set(eos_id),
         done=state.done.at[slot].set((first == eos_id) & (eos_id >= 0)),
         active=state.active.at[slot].set(True),
-        model=C.insert_slot(state.model, row_model, slot),
+        model=model,
         stats=stats)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
-    """Mark a retired row's slot as free (its cache is overwritten on the
-    next admit; see cache.reset_slot for eager scrubbing)."""
+    """Mark a retired row's slot as free.  Linear caches are overwritten on
+    the next admit (see cache.reset_slot for eager scrubbing); paged caches
+    return the slot's pages to the free stack NOW — reclaiming pool capacity
+    at retirement is the whole point of the paged layout."""
+    model = state.model
+    if C.is_paged(model):
+        model = C.free_slot_pages(model, slot)
     return dataclasses.replace(
         state,
+        model=model,
         active=state.active.at[slot].set(False),
         done=state.done.at[slot].set(True))
 
@@ -256,6 +323,14 @@ def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
 def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
                tables: Optional[NGramTables], s: DecodeState) -> DecodeState:
     B, L = s.buf.shape
+    if C.is_paged(s.model):
+        # on-the-fly page growth: this step commits at most w+1 tokens per
+        # row (positions cur_len .. cur_len+w), so cover cur_len + w + 1
+        # before the verify/commit touches the pool
+        act = s.active & (~s.done) & (s.buf_len - s.prompt_len < s.budget)
+        s = dataclasses.replace(
+            s, model=C.grow_pages(s.model,
+                                  s.model["cur_len"] + spec.w + 1, act))
     buf_c, len_c, done_c, state_c = s.buf, s.buf_len, s.done, s.model
     st = s.stats
     last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)[:, 0]
@@ -320,6 +395,10 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
 def _greedy_body(params, cfg: ModelConfig, spec: SpecConfig,
                  tables: Optional[NGramTables], s: DecodeState) -> DecodeState:
     B, L = s.buf.shape
+    if C.is_paged(s.model):
+        act = s.active & (~s.done) & (s.buf_len - s.prompt_len < s.budget)
+        s = dataclasses.replace(
+            s, model=C.grow_pages(s.model, s.model["cur_len"] + 1, act))
     buf_c, len_c, done_c, state_c = s.buf, s.buf_len, s.done, s.model
     last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)
     logits, state_n = M.decode(params, cfg, state_c, last)
@@ -374,15 +453,19 @@ def spec_step(params, cfg: ModelConfig, spec: SpecConfig, state: DecodeState,
 # ---------------------------------------------------------------------------
 def generate(params, cfg: ModelConfig, spec: SpecConfig,
              prompt: jnp.ndarray, tables: Optional[NGramTables] = None,
-             eos_id: Optional[jnp.ndarray] = None
+             eos_id: Optional[jnp.ndarray] = None,
+             paged: Optional[PagedConfig] = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Generate up to max_new_tokens for every row of ``prompt`` (B, P).
 
     ``eos_id``: optional per-row override of spec.eos_id (traced, so
-    heterogeneous batches share one compilation).  Returns (buf (B, L),
-    buf_len (B,), stats).  jit-compatible end to end.
+    heterogeneous batches share one compilation).  ``paged`` runs the same
+    loop over the paged KV layout (bit-identical outputs — the parity
+    tests' contract).  Returns (buf (B, L), buf_len (B,), stats).
+    jit-compatible end to end.
     """
-    state = init_decode_state(params, cfg, spec, prompt, eos_id=eos_id)
+    state = init_decode_state(params, cfg, spec, prompt, eos_id=eos_id,
+                              paged=paged)
 
     def cond(s: DecodeState):
         return (~s.done).any() & ((s.buf_len - s.prompt_len) < s.budget).any()

@@ -99,6 +99,21 @@ def verify_attention(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
                                  interpret=default_interpret())
 
 
+def verify_attention_paged(q, k_pool, v_pool, page_table, k_tail, v_tail,
+                           cur_len, *, w1: int) -> jnp.ndarray:
+    """Pallas bifurcated verify attention over a paged KV pool.
+
+    q: (B, K, W1, H, hd); pools (num_pages, page_size, KV, hd); page_table
+    (B, pages_per_slot) int32 (-1 = unallocated); tails (B, K, W1, KV, hd);
+    cur_len (B,).  Returns (B, K, W1, H, hd).  The kernel's cache-block grid
+    walks the page table (one grid step per page), so page_size plays the
+    role block_s has on the linear path.
+    """
+    return ops.paged_spec_attention_op(q, k_pool, v_pool, page_table,
+                                       k_tail, v_tail, cur_len, w1=w1,
+                                       interpret=default_interpret())
+
+
 # ----------------------------------------------------------------------------
 # context N-gram match/hash sweep
 # ----------------------------------------------------------------------------

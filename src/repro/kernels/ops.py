@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .ngram_match import DEFAULT_BLOCK_L, ngram_match_call
-from .spec_attention import DEFAULT_BLOCK_S, spec_attention_call
+from .spec_attention import (DEFAULT_BLOCK_S, paged_spec_attention_call,
+                             spec_attention_call)
 
 
 def _default_interpret() -> bool:
@@ -57,6 +58,34 @@ def spec_attention_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
     # dispatch.align_cache_len; arbitrary lengths stay correct here)
     out = spec_attention_call(qk, kc, vc, kt, vt, cur_len.astype(jnp.int32),
                               w1=W1, block_s=bs, interpret=interpret)
+    return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("w1", "interpret"))
+def paged_spec_attention_op(q, k_pool, v_pool, page_table, k_tail, v_tail,
+                            cur_len, *, w1: int,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Engine-facing paged layout: q (B,K,W1,H,hd);
+    pools (num_pages, page_size, KV, hd); page_table (B, pages_per_slot);
+    tails (B,K,W1,KV,hd); cur_len (B,).  Returns (B,K,W1,H,hd).
+
+    No cache padding path exists here on purpose: the pool is whole pages by
+    construction (page_size == the kernel's block_s), which is exactly why
+    the paged layout is free for this kernel (DESIGN.md §8).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, K, W1, H, hd = q.shape
+    KV = k_pool.shape[2]
+    qk = q.transpose(0, 3, 1, 2, 4).reshape(B, H, K * W1, hd)
+    kp = k_pool.transpose(0, 2, 1, 3)            # (NP, KV, ps, hd)
+    vp = v_pool.transpose(0, 2, 1, 3)
+    kt = k_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    vt = v_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    out = paged_spec_attention_call(qk, kp, vp,
+                                    page_table.astype(jnp.int32), kt, vt,
+                                    cur_len.astype(jnp.int32), w1=W1,
+                                    interpret=interpret)
     return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
 
 

@@ -20,6 +20,15 @@ The speculative tail (K*W1 keys) is processed in the LAST grid step with a
 row-block-diagonal causal mask: query row i = (draft r_i, offset t_i) may
 attend tail key j = (r_j, t_j) iff r_i == r_j and t_j <= t_i — drafts never
 see each other, exactly the paper's batched independence.
+
+Paged variant (DESIGN.md §8): the cache streaming is already block-shaped,
+so the page-pool layout costs the kernel nothing — ``paged_spec_attention_call``
+keeps the SAME kernel body and only swaps the cache index map: the pool is
+(num_pages, KV, page_size, hd) with page_size == block_s, the per-slot page
+table rides in as a second scalar-prefetch operand, and grid step s of batch
+b DMAs physical page ``page_table[b, s]`` instead of linear block s.
+Unallocated pages (-1) clamp to page 0; every position they cover is
+>= cur_len, so the existing block mask hides them.
 """
 from __future__ import annotations
 
@@ -137,3 +146,59 @@ def spec_attention_call(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
         out_shape=jax.ShapeDtypeStruct((B, H, KW1, hd), q.dtype),
         interpret=interpret,
     )(cur_len, q, k_cache, v_cache, k_tail, v_tail)
+
+
+def _paged_kernel(cur_len_ref, pt_ref, *rest, **kw):
+    # the page table steers DMA from the index maps only; the body is the
+    # linear kernel unchanged (page s holds positions [s*ps, (s+1)*ps) of
+    # its slot, exactly what the block mask assumes)
+    return _kernel(cur_len_ref, *rest, **kw)
+
+
+def paged_spec_attention_call(q, k_pool, v_pool, page_table, k_tail, v_tail,
+                              cur_len, *, w1: int,
+                              interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, KW1, hd); k_pool/v_pool: (num_pages, KV, page_size, hd);
+    page_table: (B, pages_per_slot) int32, -1 = unallocated; tails/cur_len
+    as in spec_attention_call.  block_s == page_size by construction, so the
+    grid's cache axis walks the slot's page table: pages_per_slot steps per
+    (batch, head), each DMA-ing one whole physical page.
+    """
+    B, H, KW1, hd = q.shape
+    NP, KV, ps = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    PPS = page_table.shape[1]
+    G = H // KV
+    assert KW1 % w1 == 0
+    grid = (B, H, PPS)
+    scale = 1.0 / (hd ** 0.5)
+
+    def page_ix(b, h, s, cl, pt):
+        return (jnp.maximum(pt[b, s], 0), h // G, 0, 0)
+
+    kernel = functools.partial(_paged_kernel, w1=w1, scale=scale, block_s=ps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, KW1, hd),
+                             lambda b, h, s, cl, pt: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, ps, hd), page_ix),
+                pl.BlockSpec((1, 1, ps, hd), page_ix),
+                pl.BlockSpec((1, 1, KW1, hd),
+                             lambda b, h, s, cl, pt: (b, h // G, 0, 0)),
+                pl.BlockSpec((1, 1, KW1, hd),
+                             lambda b, h, s, cl, pt: (b, h // G, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, KW1, hd),
+                                   lambda b, h, s, cl, pt: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((KW1,), jnp.float32),
+                pltpu.VMEM((KW1,), jnp.float32),
+                pltpu.VMEM((KW1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, KW1, hd), q.dtype),
+        interpret=interpret,
+    )(cur_len, page_table, q, k_pool, v_pool, k_tail, v_tail)

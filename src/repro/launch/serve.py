@@ -34,6 +34,18 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="serve with slot-level continuous batching instead "
                          "of static batches")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache for continuous batching: slots "
+                         "share a page pool with per-slot page tables "
+                         "(DESIGN.md §8) instead of worst-case linear "
+                         "buffers; bit-identical outputs")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size for --paged (0 = linear worst "
+                         "case; smaller pools defer admission when "
+                         "exhausted)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="positions per page for --paged (0 = the verify "
+                         "kernel's cache block)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "xla", "pallas"],
                     help="kernel-dispatch backend (kernels/dispatch.py): "
@@ -41,6 +53,8 @@ def main() -> None:
                          "off-TPU runs in interpret mode (slow, parity "
                          "checking only)")
     args = ap.parse_args()
+    if args.paged and not args.continuous:
+        raise SystemExit("--paged applies to --continuous serving")
 
     cfg = get_smoke_config(args.arch)
     if cfg.encoder_only:
@@ -67,15 +81,22 @@ def main() -> None:
     spec = SpecConfig(k=args.k, w=args.w, strategy=args.strategy,
                       max_new_tokens=args.max_new, backend=args.backend)
     eng = ServingEngine(params, cfg, spec, max_batch=args.n_prompts,
-                        max_new_cap=args.max_new)
+                        max_new_cap=args.max_new, paged=args.paged,
+                        num_pages=args.num_pages or None,
+                        page_size=args.page_size)
     for prompt, _ in make_prompts(args.task, args.n_prompts):
         eng.submit(prompt, max_new_tokens=args.max_new)
     served = eng.serve_continuous() if args.continuous else eng.serve_all()
     for r in served:
+        if "error" in r.stats:
+            print(f"[req {r.request_id}] REJECTED: {r.stats['error']}")
+            continue
         print(f"[req {r.request_id}] tokens/call="
               f"{r.stats['tokens_per_call']:.2f} "
               f"calls={r.stats['model_calls']} "
               f"output={r.output[:60]!r}")
+    if args.paged:
+        print(f"pool: {eng.pool_stats()}")
 
 
 if __name__ == "__main__":

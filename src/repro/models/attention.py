@@ -285,7 +285,8 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
                 positions: jnp.ndarray,
                 k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                 cache_pos: jnp.ndarray,
-                cur_len: Optional[jnp.ndarray] = None
+                cur_len: Optional[jnp.ndarray] = None,
+                page_table: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Bifurcated batched-speculation attention (the paper's verification).
 
@@ -297,6 +298,12 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
     positions: (B, w1) or (3, B, w1) — identical for all k rows.
     cur_len: (B,) committed cache length (linear caches); enables the Pallas
     backend (kernels/dispatch.py) when ``cfg.backend`` resolves to pallas.
+    page_table: (B, pages_per_slot) when the cache is PAGED (DESIGN.md §8) —
+    k_cache/v_cache are then the shared (num_pages, page_size, KV, hd) pool:
+    the Pallas backend walks the table directly (one grid step per page);
+    the XLA backend gathers the per-slot linear view first and reuses
+    ``_verify_attention_xla`` unchanged, which is what the bit-parity tests
+    pin against the linear layout.
     Returns (y (B,k,w1,d), k_new, v_new (B,k,w1,KV,hd)).
     """
     B, K, W1, d = x.shape
@@ -320,7 +327,18 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
     kn = k_new.reshape(B, K, W1, KV, hd)
     vn = v_new.reshape(B, K, W1, KV, hd)
     pos2d = positions[0] if positions.ndim == 3 else positions  # (B, w1)
-    if _use_verify_kernel(cfg, cur_len):
+    if page_table is not None:
+        if _use_verify_kernel(cfg, cur_len):
+            from ..kernels import dispatch
+            out = dispatch.verify_attention_paged(qk, k_cache, v_cache,
+                                                  page_table, kn, vn,
+                                                  cur_len, w1=W1)
+        else:
+            from .cache import gather_pages
+            k_lin, v_lin = gather_pages(k_cache, v_cache, page_table)
+            out = _verify_attention_xla(qk, k_lin, v_lin, kn, vn, cache_pos,
+                                        pos2d, cfg)
+    elif _use_verify_kernel(cfg, cur_len):
         from ..kernels import dispatch
         out = dispatch.verify_attention(qk, k_cache, v_cache, kn, vn,
                                         cur_len, w1=W1,

@@ -1,5 +1,5 @@
-"""Decode-state management: KV caches (linear + sliding-window ring), SSM and
-xLSTM recurrent states, and the speculative *commit* semantics.
+"""Decode-state management: KV caches (linear, sliding-window ring, paged),
+SSM and xLSTM recurrent states, and the speculative *commit* semantics.
 
 Paper mapping (Appendix D): the paper keeps a batched (k-row) static KV cache,
 initialised from a k=1 cache by broadcasting, and after each verification
@@ -18,6 +18,23 @@ the transformer can ``lax.scan`` over it):
     "groups": {gid: {...}}  — gid = "pre{i}" or "p{j}"; every leaf has
                                leading dim R (R=1 for prefix groups).
   }
+
+Paged layout (DESIGN.md §8): instead of a per-slot linear buffer
+(R, B, S, KV, hd), attention groups hold ONE shared page pool
+(R, num_pages, page_size, KV, hd) and the state grows four extra leaves:
+
+    "page_table": (B, pages_per_slot) int32  — physical page per logical
+                                               page, -1 = unallocated,
+    "n_pages":    (B,) int32                 — allocated pages per slot,
+    "free_list":  (num_pages,) int32         — free-page stack,
+    "free_top":   () int32                   — #free pages (stack pointer).
+
+The page table is shared by every layer (physical page p of every group's
+pool belongs to the same slot), page_size matches the Pallas verify
+kernel's ``block_s`` cache-streaming grid, and alloc/free/grow are pure
+jnp scatter/gather so they run inside the jitted admit/release/spec-step
+path.  Recurrent leaves stay per-slot (they are O(1) in sequence length).
+Presence of "page_table" is what flags a state as paged (`is_paged`).
 """
 from __future__ import annotations
 
@@ -46,41 +63,47 @@ def group_ids(cfg: ModelConfig):
     return out
 
 
+def _init_group(cfg: ModelConfig, spec: BlockSpec, R: int, batch: int,
+                S: int) -> Dict:
+    """Empty decode-state group for one layer position (linear ATTN layout)."""
+    hd = cfg.resolved_head_dim
+    if spec.mixer == ATTN:
+        shape = (R, batch, S, cfg.num_kv_heads, hd)
+        return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                "v": jnp.zeros(shape, cfg.compute_dtype)}
+    elif spec.mixer == MAMBA:
+        return {
+            "conv": jnp.zeros((R, batch, cfg.mamba_d_conv - 1,
+                               cfg.mamba_d_inner), cfg.compute_dtype),
+            "ssm": jnp.zeros((R, batch, cfg.mamba_d_inner,
+                              cfg.mamba_d_state), jnp.float32)}
+    elif spec.mixer == MLSTM:
+        di = int(cfg.d_model * cfg.xlstm_mlstm_proj_factor)
+        nh = cfg.num_heads
+        dh = di // nh
+        return {
+            "C": jnp.zeros((R, batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((R, batch, nh, dh), jnp.float32),
+            "m": jnp.full((R, batch, nh), -1e9, jnp.float32),
+            "conv": jnp.zeros((R, batch, cfg.xlstm_conv_kernel - 1, di),
+                              cfg.compute_dtype)}
+    elif spec.mixer == SLSTM:
+        nh = cfg.num_heads
+        dh = cfg.d_model // nh
+        # distinct buffers per leaf: sharing one zeros array here makes
+        # donation of the enclosing state illegal ("same buffer donated
+        # twice" in the jitted admit/spec-step path)
+        z = lambda: jnp.zeros((R, batch, nh, dh), jnp.float32)
+        return {"c": z(), "n": z(), "h": z(),
+                "m": jnp.full((R, batch, nh, dh), -1e9, jnp.float32)}
+    raise ValueError(spec.mixer)
+
+
 def init_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     """Allocate an empty decode state for ``batch`` sequences."""
     S = cache_buffer_len(cfg, max_len)
-    hd = cfg.resolved_head_dim
-    groups = {}
-    for gid, spec, R in group_ids(cfg):
-        if spec.mixer == ATTN:
-            shape = (R, batch, S, cfg.num_kv_heads, hd)
-            groups[gid] = {"k": jnp.zeros(shape, cfg.compute_dtype),
-                           "v": jnp.zeros(shape, cfg.compute_dtype)}
-        elif spec.mixer == MAMBA:
-            groups[gid] = {
-                "conv": jnp.zeros((R, batch, cfg.mamba_d_conv - 1,
-                                   cfg.mamba_d_inner), cfg.compute_dtype),
-                "ssm": jnp.zeros((R, batch, cfg.mamba_d_inner,
-                                  cfg.mamba_d_state), jnp.float32)}
-        elif spec.mixer == MLSTM:
-            di = int(cfg.d_model * cfg.xlstm_mlstm_proj_factor)
-            nh = cfg.num_heads
-            dh = di // nh
-            groups[gid] = {
-                "C": jnp.zeros((R, batch, nh, dh, dh), jnp.float32),
-                "n": jnp.zeros((R, batch, nh, dh), jnp.float32),
-                "m": jnp.full((R, batch, nh), -1e9, jnp.float32),
-                "conv": jnp.zeros((R, batch, cfg.xlstm_conv_kernel - 1, di),
-                                  cfg.compute_dtype)}
-        elif spec.mixer == SLSTM:
-            nh = cfg.num_heads
-            dh = cfg.d_model // nh
-            # distinct buffers per leaf: sharing one zeros array here makes
-            # donation of the enclosing state illegal ("same buffer donated
-            # twice" in the jitted admit/spec-step path)
-            z = lambda: jnp.zeros((R, batch, nh, dh), jnp.float32)
-            groups[gid] = {"c": z(), "n": z(), "h": z(),
-                           "m": jnp.full((R, batch, nh, dh), -1e9, jnp.float32)}
+    groups = {gid: _init_group(cfg, spec, R, batch, S)
+              for gid, spec, R in group_ids(cfg)}
     return {"cur_len": jnp.zeros((batch,), jnp.int32), "groups": groups}
 
 
@@ -114,13 +137,277 @@ def reset_slot(cfg: ModelConfig, state: Dict, slot) -> Dict:
     Passing the existing physical buffer length S back through init_state is
     shape-stable: cache_buffer_len(cfg, S) == S whether S came from a linear
     cache or a window-sized ring, and recurrent leaves ignore max_len.
+    Paged states free the slot's pages instead of zeroing KV (a freed page
+    is never read: phys_slots maps unallocated positions out of bounds).
     """
+    if is_paged(state):
+        state = free_slot_pages(state, slot)
+        empty = init_state(cfg, 1, 1)
+        groups = dict(state["groups"])
+        for gid, g in state["groups"].items():
+            if "k" in g:
+                continue                      # pool pages already reclaimed
+            groups[gid] = jax.tree_util.tree_map(
+                lambda leaf, row: leaf.at[:, slot].set(row[:, 0]),
+                g, empty["groups"][gid])
+        return {**state, "groups": groups,
+                "cur_len": state["cur_len"].at[slot].set(0)}
     S = 1
     for gid, spec, _ in group_ids(cfg):
         if spec.mixer == ATTN:
             S = state["groups"][gid]["k"].shape[2]
             break
     return insert_slot(state, init_state(cfg, 1, S), slot)
+
+
+# ----------------------------------------------------------------------------
+# paged KV cache (DESIGN.md §8)
+# ----------------------------------------------------------------------------
+def default_page_size(cfg: ModelConfig) -> int:
+    """Pages match the Pallas verify kernel's cache-streaming block: one page
+    == one ``block_s`` VMEM block, so the paged kernel's grid steps map 1:1
+    onto pages and the pool layout needs no per-call repacking."""
+    if cfg.kernel_block_s:
+        return cfg.kernel_block_s
+    from ..kernels.spec_attention import DEFAULT_BLOCK_S
+    return DEFAULT_BLOCK_S
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged layout implements linear-cache semantics only: sliding-window
+    ring caches keep the per-slot ring buffer, and at least one attention
+    group must exist for paging to mean anything."""
+    return (cfg.sliding_window is None
+            and any(spec.mixer == ATTN for _, spec, _ in group_ids(cfg)))
+
+
+def is_paged(state: Dict) -> bool:
+    return "page_table" in state
+
+
+def paged_dims(state: Dict) -> Tuple[int, int, int]:
+    """(num_pages, page_size, pages_per_slot) of a paged state."""
+    pool = next(g["k"] for g in state["groups"].values() if "k" in g)
+    return pool.shape[1], pool.shape[2], state["page_table"].shape[1]
+
+
+def init_paged_state(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, pages_per_slot: int) -> Dict:
+    """Allocate an empty PAGED decode state: attention groups hold a shared
+    (R, num_pages, page_size, KV, hd) pool, all pages start on the free
+    stack, and every slot's page table is empty."""
+    assert paged_supported(cfg), (
+        f"{cfg.name}: paged KV requires a linear-cache attention arch "
+        f"(sliding_window=None, >=1 attn layer)")
+    hd = cfg.resolved_head_dim
+    groups = {}
+    for gid, spec, R in group_ids(cfg):
+        if spec.mixer == ATTN:
+            shape = (R, num_pages, page_size, cfg.num_kv_heads, hd)
+            groups[gid] = {"k": jnp.zeros(shape, cfg.compute_dtype),
+                           "v": jnp.zeros(shape, cfg.compute_dtype)}
+        else:
+            groups[gid] = _init_group(cfg, spec, R, batch, 0)
+    return {"cur_len": jnp.zeros((batch,), jnp.int32),
+            "groups": groups,
+            "page_table": jnp.full((batch, pages_per_slot), -1, jnp.int32),
+            "n_pages": jnp.zeros((batch,), jnp.int32),
+            "free_list": jnp.arange(num_pages, dtype=jnp.int32),
+            "free_top": jnp.asarray(num_pages, jnp.int32)}
+
+
+def pages_for_len(length, page_size: int):
+    """Pages needed to hold ``length`` positions (works traced or concrete)."""
+    return (length + page_size - 1) // page_size
+
+
+def phys_slots(page_table: jnp.ndarray, pos: jnp.ndarray, page_size: int,
+               num_pages: int) -> jnp.ndarray:
+    """Physical pool slot for each logical position. pos: (B, T) int32.
+
+    Positions without an allocated page map to the out-of-bounds sentinel
+    ``num_pages * page_size`` so scatter writes with ``mode='drop'`` discard
+    them (never clamp: a clamped index would silently write into another
+    slot's page).
+    """
+    B, PPS = page_table.shape
+    pg = pos // page_size
+    pid = jnp.take_along_axis(page_table, jnp.clip(pg, 0, PPS - 1), axis=1)
+    ok = (pos >= 0) & (pg < PPS) & (pid >= 0)
+    return jnp.where(ok, pid * page_size + pos % page_size,
+                     num_pages * page_size).astype(jnp.int32)
+
+
+def paged_kv_write(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                   k_new: jnp.ndarray, v_new: jnp.ndarray,
+                   phys: jnp.ndarray,
+                   gate: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter new KV into the shared pool.  pools: (N, ps, KV, hd);
+    k_new/v_new: (B, T, KV, hd); phys: (B, T) physical slots (flattened pool
+    indexing, out-of-bounds = skip); gate: (B, T) bool — write where True.
+
+    Distinct slots own distinct pages, so flattened scatter indices never
+    collide across batch rows; gated-off / unallocated writes fall on the
+    out-of-bounds sentinel and are dropped.
+    """
+    N, ps = k_pool.shape[:2]
+    tail = k_pool.shape[2:]
+    if gate is not None:
+        phys = jnp.where(gate, phys, N * ps)
+    idx = phys.reshape(-1)
+    kf = k_pool.reshape((N * ps,) + tail)
+    vf = v_pool.reshape((N * ps,) + tail)
+    kf = kf.at[idx].set(k_new.reshape((-1,) + tail).astype(kf.dtype),
+                        mode="drop")
+    vf = vf.at[idx].set(v_new.reshape((-1,) + tail).astype(vf.dtype),
+                        mode="drop")
+    return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
+
+
+def gather_pages(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                 page_table: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialise the per-slot linear view (B, pages_per_slot*ps, KV, hd)
+    of the pool — the XLA fallback's read path.  Unallocated pages clamp to
+    physical page 0; every position they cover is >= cur_len, so the
+    verify-attention mask already hides the garbage.
+    """
+    N = k_pool.shape[0]
+    B, PPS = page_table.shape
+    pid = jnp.clip(page_table, 0, N - 1)               # (B, PPS)
+    ps = k_pool.shape[1]
+    tail = k_pool.shape[2:]
+    k_lin = k_pool[pid].reshape((B, PPS * ps) + tail)
+    v_lin = v_pool[pid].reshape((B, PPS * ps) + tail)
+    return k_lin, v_lin
+
+
+def alloc_slot_pages(state: Dict, slot, n_new) -> Dict:
+    """Pop ``n_new`` pages off the free stack into ``slot``'s page table
+    (appended after its currently-allocated pages).  jit-compatible: ``slot``
+    and ``n_new`` may be traced.  The caller guarantees n_new <= free_top
+    (the serving engine's page-reservation admission does; see engine.py).
+    """
+    pt, npg = state["page_table"], state["n_pages"]
+    fl, ft = state["free_list"], state["free_top"]
+    PPS, N = pt.shape[1], fl.shape[0]
+    cur = npg[slot]
+    idx = jnp.arange(PPS)
+    j = idx - cur                                   # j-th newly-added page
+    take = (j >= 0) & (j < n_new)
+    src = ft - 1 - j
+    grant = take & (src >= 0) & (src < N)
+    row = jnp.where(grant, fl[jnp.clip(src, 0, N - 1)], pt[slot])
+    return {**state,
+            "page_table": pt.at[slot].set(row),
+            "n_pages": npg.at[slot].set(cur + grant.sum().astype(jnp.int32)),
+            "free_top": jnp.maximum(ft - n_new, 0).astype(jnp.int32)}
+
+
+def free_slot_pages(state: Dict, slot) -> Dict:
+    """Push every page of ``slot`` back onto the free stack and clear its
+    table.  Idempotent: a slot with n_pages == 0 is a no-op, so release
+    followed by a defensive free at admission cannot double-free."""
+    pt, npg = state["page_table"], state["n_pages"]
+    fl, ft = state["free_list"], state["free_top"]
+    PPS, N = pt.shape[1], fl.shape[0]
+    n = npg[slot]
+    idx = jnp.arange(PPS)
+    dst = jnp.where(idx < n, ft + idx, N)           # OOB sentinel -> dropped
+    fl = fl.at[dst].set(pt[slot], mode="drop")
+    return {**state,
+            "free_list": fl,
+            "free_top": (ft + n).astype(jnp.int32),
+            "page_table": pt.at[slot].set(jnp.full((PPS,), -1, jnp.int32)),
+            "n_pages": npg.at[slot].set(0)}
+
+
+def grow_pages(state: Dict, required_len: jnp.ndarray,
+               active: jnp.ndarray) -> Dict:
+    """Batched on-the-fly growth: ensure every ``active`` slot has pages
+    covering ``required_len`` positions (spec_step calls this each iteration
+    with cur_len + w + 1, so commits never outrun the table).
+
+    Pops sum(need) pages in one vectorised step; on exhaustion a slot's
+    missing pages stay -1 (its writes drop, reads mask — row-local
+    corruption at worst, never another slot's pages).  The engine's
+    reservation admission keeps exhaustion unreachable in serving.
+    """
+    pt, npg = state["page_table"], state["n_pages"]
+    fl, ft = state["free_list"], state["free_top"]
+    B, PPS = pt.shape
+    N = fl.shape[0]
+    ps = paged_dims(state)[1]
+    need = jnp.maximum(pages_for_len(required_len, ps) - npg, 0)
+    need = jnp.where(active, need, 0).astype(jnp.int32)
+    offs = jnp.cumsum(need) - need                  # exclusive prefix (B,)
+    idx = jnp.arange(PPS)[None, :]
+    j = idx - npg[:, None]                          # j-th new page per row
+    take = (j >= 0) & (j < need[:, None])
+    src = ft - 1 - (offs[:, None] + j)
+    grant = take & (src >= 0)
+    new_pt = jnp.where(grant, fl[jnp.clip(src, 0, N - 1)], pt)
+    return {**state,
+            "page_table": new_pt,
+            "n_pages": npg + grant.sum(axis=1).astype(jnp.int32),
+            "free_top": jnp.maximum(ft - need.sum(), 0).astype(jnp.int32)}
+
+
+def insert_slot_paged(state: Dict, row_state: Dict, slot,
+                      row_len: int) -> Dict:
+    """Paged counterpart of insert_slot: scatter a prefilled batch-1 LINEAR
+    row state (buffer length ``row_len``, cur_len == row_len) into the pool
+    pages already allocated to ``slot``; recurrent leaves copy as usual.
+
+    The caller allocates ceil(row_len / page_size) pages first
+    (alloc_slot_pages) — spec_engine.admit_slot does both inside one jit.
+    """
+    N, ps, _ = paged_dims(state)
+    pos = jnp.arange(row_len, dtype=jnp.int32)[None, :]          # (1, row_len)
+    phys = phys_slots(state["page_table"][slot][None], pos, ps, N)
+    groups = dict(state["groups"])
+    for gid, g in state["groups"].items():
+        row_g = row_state["groups"][gid]
+        if "k" in g:                                 # attention group -> pool
+            # row KV is (R, 1, row_len, KV, hd); vmap over R hands
+            # paged_kv_write the (1, row_len, KV, hd) batch it expects
+            kc, vc = jax.vmap(
+                lambda kp, vp, kr, vr: paged_kv_write(kp, vp, kr, vr, phys)
+            )(g["k"], g["v"], row_g["k"], row_g["v"])
+            groups[gid] = {"k": kc, "v": vc}
+        else:
+            groups[gid] = jax.tree_util.tree_map(
+                lambda leaf, row: leaf.at[:, slot].set(row[:, 0]), g, row_g)
+    return {**state, "groups": groups,
+            "cur_len": state["cur_len"].at[slot].set(row_state["cur_len"][0])}
+
+
+def check_page_invariants(state: Dict) -> Dict:
+    """Host-side free-list/page-table audit (tests + debugging).
+
+    Asserts: allocated pages are unique, disjoint from the free stack, and
+    together with it cover exactly {0..num_pages-1}; every page table row is
+    n_pages valid entries followed by -1s.  Returns summary counts.
+    """
+    import numpy as np
+    pt = np.asarray(state["page_table"])
+    npg = np.asarray(state["n_pages"])
+    fl = np.asarray(state["free_list"])
+    ft = int(np.asarray(state["free_top"]))
+    N = fl.shape[0]
+    allocated = []
+    for b in range(pt.shape[0]):
+        row = pt[b]
+        n = int(npg[b])
+        assert (row[:n] >= 0).all(), (b, row, n)
+        assert (row[n:] == -1).all(), (b, row, n)
+        allocated.extend(row[:n].tolist())
+    free = fl[:ft].tolist()
+    assert len(set(allocated)) == len(allocated), "page double-mapped"
+    assert not (set(allocated) & set(free)), "allocated page on free stack"
+    assert set(allocated) | set(free) == set(range(N)), (
+        f"page leak: {sorted(set(range(N)) - set(allocated) - set(free))}")
+    return {"num_pages": N, "free": ft, "allocated": len(allocated)}
 
 
 # ----------------------------------------------------------------------------

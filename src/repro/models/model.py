@@ -11,7 +11,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .cache import group_ids, init_state, key_positions, kv_write, write_slots
+from .cache import (group_ids, init_state, is_paged, key_positions, kv_write,
+                    paged_dims, paged_kv_write, phys_slots, write_slots)
 from .config import ATTN, MROPE, ModelConfig, layer_blocks
 from .layers import apply_norm, embed_tokens, lm_logits
 from .transformer import init_params, run_stack
@@ -85,12 +86,19 @@ def prefill(params: Params, cfg: ModelConfig, state: State, tokens=None,
     if positions is None:
         positions = make_positions(cfg, B, T)
     ctx = {"positions": positions}
+    if is_paged(state):
+        # prefill writes positions 0..T-1 of every row through its page
+        # table (pages must already be allocated — see spec_engine)
+        NP, ps, _ = paged_dims(state)
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        ctx["paged"] = True
+        ctx["slots"] = phys_slots(state["page_table"], pos, ps, NP)
     x, new_groups, _ = run_stack(params, cfg, x, "prefill", state, ctx)
     x = apply_norm(params["final_norm"], x, cfg)
     if last_only:
         x = x[:, -1:]
     logits = lm_logits(params["embed"], x, cfg)
-    new_state = {"cur_len": state["cur_len"] + T,
+    new_state = {**state, "cur_len": state["cur_len"] + T,
                  "groups": {**state["groups"], **new_groups}}
     return logits, new_state
 
@@ -111,12 +119,20 @@ def decode(params: Params, cfg: ModelConfig, state: State,
     positions = make_positions(cfg, B, T, offset=cur)
     gid0 = next(gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN
                 ) if not _pure_recurrent(cfg) else None
-    S = (state["groups"][gid0]["k"].shape[2] if gid0 is not None else 0)
     adv = n_commit if n_commit is not None else T
     ctx: Dict[str, Any] = {"positions": positions}
     if gid0 is not None:
+        if is_paged(state):
+            NP, ps, pps = paged_dims(state)
+            S = pps * ps                    # logical capacity per slot
+            ctx["paged"] = True
+            ctx["page_table"] = state["page_table"]
+            ctx["slots"] = phys_slots(state["page_table"],
+                                      write_slots(cfg, S, cur, T), ps, NP)
+        else:
+            S = state["groups"][gid0]["k"].shape[2]
+            ctx["slots"] = write_slots(cfg, S, cur, T)
         ctx["cache_pos"] = key_positions(cfg, S, cur)   # pre-write owners
-        ctx["slots"] = write_slots(cfg, S, cur, T)
         ctx["cur_len"] = cur        # scalar-prefetch operand (Pallas backend)
     mode = "decode"
     if n_commit is not None:
@@ -129,7 +145,7 @@ def decode(params: Params, cfg: ModelConfig, state: State,
     x = apply_norm(params["final_norm"], x, cfg)
     logits = lm_logits(params["embed"], x, cfg)
     adv = n_commit if n_commit is not None else T
-    new_state = {"cur_len": cur + adv,
+    new_state = {**state, "cur_len": cur + adv,
                  "groups": {**state["groups"], **new_groups}}
     return logits, new_state
 
@@ -148,7 +164,13 @@ def verify(params: Params, cfg: ModelConfig, state: State,
     gid0 = next((gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN), None)
     ctx: Dict[str, Any] = {"positions": positions, "k_rows": K}
     if gid0 is not None:
-        S = state["groups"][gid0]["k"].shape[2]
+        if is_paged(state):
+            _, ps, pps = paged_dims(state)
+            S = pps * ps
+            ctx["paged"] = True
+            ctx["page_table"] = state["page_table"]
+        else:
+            S = state["groups"][gid0]["k"].shape[2]
         ctx["cache_pos"] = key_positions(cfg, S, cur)
         ctx["cur_len"] = cur        # scalar-prefetch operand (Pallas backend)
     x = _embed(params, cfg, tokens.reshape(B * K, W1), None)
@@ -161,12 +183,17 @@ def verify(params: Params, cfg: ModelConfig, state: State,
 def commit_kv_tails(cfg: ModelConfig, state: State, kv_tails: Dict,
                     winner: jnp.ndarray, n_commit: jnp.ndarray) -> State:
     """Fast commit for attention-only archs: write the winning row's accepted
-    KV tail into the shared cache (no replay forward needed)."""
+    KV tail into the shared cache (no replay forward needed).  Paged states
+    route the same gated write through each slot's page table."""
     cur = state["cur_len"]
     groups = dict(state["groups"])
-    gid0 = next(gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN)
-    S = state["groups"][gid0]["k"].shape[2]
-    W1 = None
+    paged = is_paged(state)
+    if paged:
+        NP, ps, pps = paged_dims(state)
+        S = pps * ps
+    else:
+        gid0 = next(gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN)
+        S = state["groups"][gid0]["k"].shape[2]
     for gid, tails in kv_tails.items():
         k_t, v_t = tails["k_tail"], tails["v_tail"]  # (R,B,K,W1,KV,hd)
         R, B, K, W1 = k_t.shape[:4]
@@ -175,12 +202,20 @@ def commit_kv_tails(cfg: ModelConfig, state: State, kv_tails: Dict,
         v_w = jnp.take_along_axis(v_t, wsel, axis=2)[:, :, 0]
         slots = write_slots(cfg, S, cur, W1)
         gate = jnp.arange(W1)[None, :] < n_commit[:, None]
-        kc, vc = jax.vmap(
-            lambda kcache, vcache, kn, vn: kv_write(kcache, vcache, kn, vn,
-                                                    slots, gate=gate)
-        )(state["groups"][gid]["k"], state["groups"][gid]["v"], k_w, v_w)
+        if paged:
+            phys = phys_slots(state["page_table"], slots, ps, NP)
+            kc, vc = jax.vmap(
+                lambda kp, vp, kn, vn: paged_kv_write(kp, vp, kn, vn, phys,
+                                                      gate=gate)
+            )(state["groups"][gid]["k"], state["groups"][gid]["v"], k_w, v_w)
+        else:
+            kc, vc = jax.vmap(
+                lambda kcache, vcache, kn, vn: kv_write(kcache, vcache,
+                                                        kn, vn, slots,
+                                                        gate=gate)
+            )(state["groups"][gid]["k"], state["groups"][gid]["v"], k_w, v_w)
         groups[gid] = {"k": kc, "v": vc}
-    return {"cur_len": cur + n_commit, "groups": groups}
+    return {**state, "cur_len": cur + n_commit, "groups": groups}
 
 
 def _pure_recurrent(cfg: ModelConfig) -> bool:

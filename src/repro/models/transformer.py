@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from . import moe as moe_lib
 from .attention import attn_full, attn_verify, init_attention
 from .cache import (cache_buffer_len, group_ids, key_positions, kv_write,
-                    prefill_write, select_step_state, write_slots)
+                    paged_kv_write, prefill_write, select_step_state,
+                    write_slots)
 from .config import (ATTN, MAMBA, MLSTM, MOE, NO_MLP, SLSTM, BlockSpec,
                      ModelConfig)
 from .layers import (apply_mlp, apply_norm, init_embed, init_mlp, init_norm)
@@ -91,7 +92,15 @@ def _apply_block(bp: Params, x: jnp.ndarray, cfg: ModelConfig,
             y, (k_new, v_new) = attn_full(bp["mixer"], h, cfg,
                                           ctx["positions"])
             if mode == "prefill":
-                kc, vc = prefill_write(cfg, gst["k"], gst["v"], k_new, v_new)
+                if ctx.get("paged"):
+                    # shared pool: positions routed through each slot's
+                    # page table (model.prefill precomputed the physical
+                    # slots; no ring semantics in the paged layout)
+                    kc, vc = paged_kv_write(gst["k"], gst["v"], k_new,
+                                            v_new, ctx["slots"])
+                else:
+                    kc, vc = prefill_write(cfg, gst["k"], gst["v"], k_new,
+                                           v_new)
                 new_gst = {"k": kc, "v": vc}
         elif mode in ("decode", "replay"):
             # Bifurcated decode (= verify with k=1): the query block attends
@@ -104,17 +113,24 @@ def _apply_block(bp: Params, x: jnp.ndarray, cfg: ModelConfig,
             y, k_t, v_t = attn_verify(bp["mixer"], h[:, None], cfg,
                                       ctx["positions"], gst["k"], gst["v"],
                                       ctx["cache_pos"],
-                                      cur_len=ctx.get("cur_len"))
+                                      cur_len=ctx.get("cur_len"),
+                                      page_table=ctx.get("page_table"))
             y = y[:, 0]
-            kc, vc = kv_write(gst["k"], gst["v"], k_t[:, 0], v_t[:, 0],
-                              ctx["slots"], gate=ctx.get("gate"))
+            if ctx.get("paged"):
+                kc, vc = paged_kv_write(gst["k"], gst["v"], k_t[:, 0],
+                                        v_t[:, 0], ctx["slots"],
+                                        gate=ctx.get("gate"))
+            else:
+                kc, vc = kv_write(gst["k"], gst["v"], k_t[:, 0], v_t[:, 0],
+                                  ctx["slots"], gate=ctx.get("gate"))
             new_gst = {"k": kc, "v": vc}
         elif mode == "verify":
-            B = gst["k"].shape[0]
+            B = h.shape[0] // K         # pool states carry no batch dim
             hv = h.reshape(B, K, h.shape[-2], h.shape[-1])
             y, k_t, v_t = attn_verify(bp["mixer"], hv, cfg, ctx["positions"],
                                       gst["k"], gst["v"], ctx["cache_pos"],
-                                      cur_len=ctx.get("cur_len"))
+                                      cur_len=ctx.get("cur_len"),
+                                      page_table=ctx.get("page_table"))
             y = y.reshape(x.shape)
             new_gst = {"k_tail": k_t, "v_tail": v_t}
         else:

@@ -14,6 +14,13 @@ Two serving modes share the engine:
     jitted ``spec_step``: between verify calls, finished rows are retired
     and queued prompts are prefilled into the freed slots (admit_slot), so
     slots never idle while there is work queued.
+
+Continuous batching can further run over the PAGED KV layout
+(``paged=True``, DESIGN.md §8): slots share a page pool with per-slot page
+tables and admission is gated on pages-available (worst-case reservation,
+deferral when the pool is exhausted) instead of slot count alone —
+bit-identical outputs, but one long-context request no longer forces every
+slot to a worst-case linear buffer.
 """
 from __future__ import annotations
 
@@ -27,11 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ngram_tables import NGramTables, build_bigram, build_unigram
-from ..core.spec_engine import (DecodeState, SpecConfig, admit_slot,
-                                empty_decode_state, generate, release_slot,
-                                spec_step)
+from ..core.spec_engine import (DecodeState, PagedConfig, SpecConfig,
+                                admit_slot, empty_decode_state, generate,
+                                release_slot, spec_step)
 from ..data.tokenizer import ByteTokenizer
 from ..kernels import dispatch
+from ..models import cache as Cache
 from ..models import model as M
 from ..models.config import ModelConfig
 from .scheduler import DEFAULT_BUCKETS, Batch, Request, Scheduler, SlotMap
@@ -45,13 +53,24 @@ class ServingEngine:
                  adaptive: bool = False,
                  buckets: Optional[Tuple[int, ...]] = None,
                  max_new_cap: int = 64,
-                 bucket_align: Optional[int] = None):
+                 bucket_align: Optional[int] = None,
+                 paged: bool = False,
+                 num_pages: Optional[int] = None,
+                 page_size: int = 0):
         """``adaptive``: pick (k, w) per batch with the UCB controller
         (core/controller.py, beyond-paper) instead of a static setting.
         ``buckets``/``max_new_cap`` bound the continuous-batching DecodeState
         (buffer length = largest bucket + max_new_cap + w + 2).
         ``bucket_align``: bucket-boundary multiple; None = lane-aligned when
-        the Pallas backend is active, else 1 (kernels/dispatch.py)."""
+        the Pallas backend is active, else 1 (kernels/dispatch.py).
+
+        ``paged``: continuous batching over the paged KV layout (DESIGN.md
+        §8): slots share a ``num_pages``-page pool (default: the linear
+        worst case — pass less to actually cap memory) and admission is
+        page-reservation-based, so one long-context request no longer
+        forces every slot to a worst-case linear buffer.  ``page_size`` 0
+        follows cfg.kernel_block_s (the Pallas verify kernel's cache
+        block).  Bit-identical outputs to the linear layout."""
         self.params = params
         self.cfg = cfg
         self.spec = spec or SpecConfig(strategy="greedy")
@@ -75,6 +94,13 @@ class ServingEngine:
         if adaptive:
             from ..core.controller import AdaptiveKW
             self.controller = AdaptiveKW(cfg)
+        self.paged = paged
+        if paged and not Cache.paged_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged KV needs a linear-cache attention arch "
+                f"(sliding_window=None, >=1 attn layer); run linear instead")
+        self._paged_cfg = (PagedConfig(num_pages or 0, page_size)
+                           if paged else None)
         if (self.spec.strategy != "greedy" or adaptive) and tables is None:
             tables = self.build_tables(k_max=max(self.spec.k, 25),
                                        w_max=max(self.spec.w, 16))
@@ -174,16 +200,27 @@ class ServingEngine:
     def _init_continuous(self) -> None:
         if self.controller is not None:
             raise NotImplementedError(
-                "adaptive (k,w) requires a static batch per arm; in-flight "
-                "adaptation over spec_step is a ROADMAP item")
+                "adaptive (k, w) over continuous batching is not implemented"
+                ": the UCB controller (core/controller.py) picks one static "
+                "(k, w) arm per whole batch, but the continuous path reuses "
+                "ONE jitted spec_step whose shapes bake in (k, w) — per-step "
+                "arm switching would recompile every change.  This is the "
+                "ROADMAP item 'In-flight adaptive (k, w) over spec_step'; "
+                "the planned fix is per-step arm selection that MASKS down "
+                "from a max (k, w) so shapes stay stable.  Until then use "
+                "adaptive=True with serve_all(), or continuous batching "
+                "with a static SpecConfig.")
         # size the DecodeState to the queued workload, not the 512-token
         # worst case; the scheduler itself is left untouched (a later
         # serve_all on this engine sees the full bucket ladder).  Prompts
-        # longer than the sized capacity are truncated at admission — with
-        # a warning, mirroring the max_new_cap clamp.  Pass buckets=
-        # explicitly to reserve more up front.
+        # longer than the sized capacity are REJECTED at admission with a
+        # per-request error stat (truncating them would silently corrupt
+        # the output).  Pass buckets= explicitly to reserve more up front.
+        # Paged mode reserves the FULL bucket ladder instead: per-slot
+        # token buffers are cheap (int32), and KV capacity is governed by
+        # the page pool, not the per-slot buffer length.
         prompt_cap = self.scheduler.buckets[-1]
-        if not self._explicit_buckets:
+        if not self.paged and not self._explicit_buckets:
             prompt_cap = self.scheduler.max_queued_bucket() or prompt_cap
         self._cont_prompt_cap = prompt_cap
         buf_size = prompt_cap + self.max_new_cap + self.spec.w + 2
@@ -191,8 +228,22 @@ class ServingEngine:
             buf_size = dispatch.align_cache_len(buf_size,
                                                 self.cfg.kernel_block_s)
         self._cont_state = empty_decode_state(self.cfg, self.spec,
-                                              self.max_batch, buf_size)
+                                              self.max_batch, buf_size,
+                                              paged=self._paged_cfg)
         self._slots = SlotMap(self.max_batch)
+        # page accounting (paged mode): admission reserves each request's
+        # worst-case page count up front so the in-step on-the-fly growth
+        # (spec_engine) can never exhaust the pool mid-flight; physical
+        # allocation stays lazy.  All host-side — no device sync to admit.
+        if self.paged:
+            self._page_size = self._paged_cfg.resolve_page_size(self.cfg)
+            pps = self._cont_state.buf_size // self._page_size
+            self._pool_pages = (self._paged_cfg.num_pages
+                                or self.max_batch * pps)
+            self._page_reserved: Dict[int, int] = {}
+            self._pool_peak = 0
+            self._deferrals = 0
+        self._rejected = 0
 
     def in_flight(self) -> int:
         return len(self._slots) if self._slots is not None else 0
@@ -227,27 +278,77 @@ class ServingEngine:
             }
             state = release_slot(state, jnp.int32(slot))
             self._slots.release(slot)
+            if self.paged:
+                self._page_reserved.pop(slot, None)
             retired.append(req)
         self._cont_state = state
         return retired
 
-    def _admit_queued(self) -> None:
+    def _slot_pages(self, prompt_len: int, mnt: int) -> int:
+        """Worst-case pool pages one request can ever occupy: the cache
+        holds at most prompt_len + mnt + w positions (cur_len peaks at
+        prompt_len + mnt - 1 and spec growth covers cur_len + w + 1)."""
+        return int(Cache.pages_for_len(prompt_len + mnt + self.spec.w,
+                                       self._page_size))
+
+    def _reject(self, req: Request, reason: str) -> Request:
+        """Per-request admission failure: the request completes with an
+        ``error`` stat instead of silently-corrupted output."""
+        req.output = None
+        req.output_ids = np.zeros((0,), np.int32)
+        req.stats = {"error": reason, "new_tokens": 0}
+        self._rejected += 1
+        warnings.warn(f"request {req.request_id} rejected: {reason}")
+        return req
+
+    def _admit_queued(self) -> List[Request]:
+        """Admit queued prompts into free slots; returns requests REJECTED
+        this round (prompt beyond capacity).  Paged mode additionally gates
+        admission on pages-available (reservation), deferring the queue
+        head — in order — until retirements free enough pages."""
         state = self._cont_state
-        for slot in self._slots.free_slots():
-            popped = self.scheduler.pop_next()
-            if popped is None:
+        rejected: List[Request] = []
+        free = self._slots.free_slots()
+        i = 0
+        while i < len(free):
+            slot = free[i]
+            head = self.scheduler.peek_next()
+            if head is None:
                 break
-            req, toks = popped
+            req, toks, raw_len = head
             if toks.shape[0] > self._cont_prompt_cap:
-                warnings.warn(
-                    f"request {req.request_id}: prompt needs a "
-                    f"{toks.shape[0]}-token bucket but the continuous "
-                    f"DecodeState was sized for {self._cont_prompt_cap} "
-                    f"(from the first wave of prompts); keeping the last "
-                    f"{self._cont_prompt_cap} tokens (pass buckets= to "
-                    f"reserve more)")
-                toks = toks[-self._cont_prompt_cap:]
+                # the request's BUCKET does not fit the self-sized state:
+                # admitting would truncate below its bucket and silently
+                # corrupt the output.  (Prompts beyond the largest bucket
+                # are left-clamped by the scheduler in both serving modes —
+                # that is bucketing policy, not a continuous-mode hazard.)
+                self.scheduler.pop_next()      # rejection frees no slot:
+                rejected.append(self._reject(  # retry this slot with the
+                    req,                       # next queued request
+                    f"prompt is {raw_len} tokens ({toks.shape[0]}-bucket) "
+                    f"but the continuous DecodeState was sized for "
+                    f"{self._cont_prompt_cap} (pass buckets= / use paged "
+                    f"mode to admit longer prompts)"))
+                continue
             mnt = min(req.max_new_tokens, self.max_new_cap)
+            if self.paged:
+                pages = self._slot_pages(toks.shape[0], mnt)
+                if pages > self._pool_pages:
+                    # can NEVER fit — deferring would deadlock an idle pool
+                    self.scheduler.pop_next()
+                    rejected.append(self._reject(
+                        req,
+                        f"request needs {pages} pages but the pool has "
+                        f"only {self._pool_pages} (raise --num-pages)"))
+                    continue
+                avail = self._pool_pages - sum(self._page_reserved.values())
+                if pages > avail:
+                    # pool exhausted: defer the head (FIFO order is kept)
+                    # until retirements return pages to the free stack
+                    self._deferrals += 1
+                    break
+                self._page_reserved[slot] = pages
+            self.scheduler.pop_next()
             if mnt < req.max_new_tokens:
                 # static serve_all honours any budget (it sizes buffers per
                 # batch); the continuous DecodeState is sized once by
@@ -263,16 +364,19 @@ class ServingEngine:
                                jnp.int32(self._effective_eos(req)))
             self._slots.assign(slot, req)
             req.stats = {"admit_t": time.perf_counter()}
+            i += 1
         self._cont_state = state
+        return rejected
 
     def step(self) -> List[Request]:
         """One continuous-batching iteration: retire finished rows, admit
         queued prompts into the freed slots, then run one jitted spec_step
-        over every active slot.  Returns the requests retired this step."""
+        over every active slot.  Returns the requests completed this step —
+        retired normally, or rejected at admission (``stats["error"]``)."""
         if self._cont_state is None:
             self._init_continuous()
         retired = self._retire_finished()
-        self._admit_queued()
+        retired.extend(self._admit_queued())
         # occupancy is tracked host-side: after retirement every occupied
         # slot is runnable (an admission that hit eos on its first token is
         # retired next step; the one no-op spec_step it gets is rarer than
@@ -280,7 +384,38 @@ class ServingEngine:
         if len(self._slots):
             self._cont_state = spec_step(self.params, self.cfg, self.spec,
                                          self._cont_state, self.tables)
+            if self.paged:
+                in_use = self._pool_pages - int(
+                    np.asarray(self._cont_state.model["free_top"]))
+                self._pool_peak = max(self._pool_peak, in_use)
         return retired
+
+    def reset_pool_counters(self) -> None:
+        """Zero the cumulative pool counters (peak pages, deferral rounds,
+        rejections) without touching the pool itself — benchmarks call this
+        after their warmup phase so the measured window starts clean."""
+        if self._cont_state is None:
+            return
+        if self.paged:
+            self._pool_peak = 0
+            self._deferrals = 0
+        self._rejected = 0
+
+    def pool_stats(self) -> Dict:
+        """Paged-pool occupancy/admission counters (paged mode only).
+
+        ``deferrals`` counts deferral ROUNDS — one per step() in which the
+        queue head could not reserve pages — not distinct requests."""
+        if not self.paged or self._cont_state is None:
+            return {}
+        return {"num_pages": self._pool_pages,
+                "page_size": self._page_size,
+                "free_pages": int(np.asarray(
+                    self._cont_state.model["free_top"])),
+                "reserved_pages": sum(self._page_reserved.values()),
+                "peak_pages": self._pool_peak,
+                "deferrals": self._deferrals,
+                "rejected": self._rejected}
 
     def serve_continuous(self) -> List[Request]:
         """Drain the queue with continuous batching; blocks until idle."""

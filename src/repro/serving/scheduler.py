@@ -120,6 +120,20 @@ class Scheduler:
         toks[bucket - len(ids):] = ids
         return toks
 
+    def peek_next(self) -> Optional[Tuple[Request, np.ndarray, int]]:
+        """FIFO head without popping: (request, (bucket,) int32, raw_len).
+
+        Lets the engine decide admissibility (page reservation, prompt
+        capacity) BEFORE committing to the pop — a deferred request stays at
+        the head of the queue in order.  ``raw_len`` is the un-bucketed
+        token count (diagnostics: rejection messages cite it alongside the
+        bucket that actually gates admission).
+        """
+        if not self._queue:
+            return None
+        req, ids = self._queue[0]
+        return req, self.pad_to_bucket(ids), len(ids)
+
     def pop_next(self) -> Optional[Tuple[Request, np.ndarray]]:
         """FIFO pop for continuous batching: (request, (bucket,) int32)."""
         if not self._queue:

@@ -204,6 +204,46 @@ def test_slot_reuse_no_cross_request_leakage(tiny_dense):
         np.testing.assert_array_equal(got.output_ids, expect)
 
 
+def test_overlong_prompt_rejected_not_truncated(tiny_dense):
+    """A prompt beyond the self-sized continuous buffer is REJECTED with a
+    per-request error stat — truncating it would silently decode from a
+    corrupted (cut-off) context.  Regression for the warn-and-truncate
+    behaviour this replaced."""
+    cfg, params = tiny_dense
+    spec = SpecConfig(k=4, w=3, strategy="greedy", max_new_tokens=8)
+    eng = ServingEngine(params, cfg, spec, max_batch=1, max_new_cap=8)
+    short = eng.submit("short", max_new_tokens=8)        # 32-bucket wave
+    eng.step()                       # engine self-sizes for 32 tokens
+    long = eng.submit("x" * 40, max_new_tokens=8)        # needs 64 bucket
+    done = eng.serve_continuous()
+    reqs = {r.request_id: r for r in done}
+    assert sorted(reqs) == sorted([short.request_id, long.request_id])
+    assert "error" in reqs[long.request_id].stats
+    assert reqs[long.request_id].output is None
+    assert reqs[long.request_id].stats["new_tokens"] == 0
+    assert "error" not in reqs[short.request_id].stats
+    assert reqs[short.request_id].stats["new_tokens"] == 8
+
+
+def test_adaptive_continuous_raises_named_roadmap_item(tiny_dense):
+    """adaptive=True over the continuous path must fail loudly, naming the
+    ROADMAP item and the shape-stable masking workaround (previously only
+    reachable, never asserted)."""
+    cfg, params = tiny_dense
+    eng = ServingEngine(params, cfg,
+                        SpecConfig(k=4, w=3, strategy="mixed",
+                                   max_new_tokens=8),
+                        tables=_tables(params, cfg), adaptive=True,
+                        max_batch=1, buckets=(16,), max_new_cap=8)
+    eng.submit("hello", max_new_tokens=8)
+    with pytest.raises(NotImplementedError) as exc:
+        eng.step()
+    msg = str(exc.value)
+    assert "In-flight adaptive" in msg          # the ROADMAP item, by name
+    assert "MASKS down" in msg                  # the planned workaround
+    assert "serve_all" in msg                   # the supported alternative
+
+
 def test_continuous_throughput_stats(tiny_dense):
     """Per-request stats survive slot reuse: calls/token counters are reset
     at admission, so a recycled slot reports only its own request."""

@@ -1,0 +1,342 @@
+"""Paged KV cache (DESIGN.md §8): layout parity, free-list hygiene, serving.
+
+Contract under test:
+  (a) free-list/page-table unit behaviour — alloc/free/grow keep the pool
+      partitioned (no double-mapped page, no leak), including heavy
+      admit/release churn (fragmentation);
+  (b) the paged Pallas kernel equals the linear kernel on the gathered
+      linear view, bit for bit (interpret mode on CPU);
+  (c) ``generate()`` and ``ServingEngine.step()`` are bit-identical between
+      the linear and paged layouts for every strategy, and between the xla
+      and pallas backends on the paged layout;
+  (d) a pool-limited long-context arrival mix that linear worst-case sizing
+      could not fit completes under paged serving with zero leaked pages.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ngram_tables import NGramTables, build_bigram, build_unigram
+from repro.core.spec_engine import (PagedConfig, SpecConfig, admit_slot,
+                                    empty_decode_state, generate,
+                                    greedy_reference, release_slot, spec_step)
+from repro.kernels import ops
+from repro.models import cache as C
+from repro.models import model as M
+from repro.models.config import BlockSpec, ModelConfig
+from repro.serving import ServingEngine
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+PS = 16  # page size everywhere below: small enough that tiny decodes
+         # cross page boundaries and exercise on-the-fly growth
+
+
+@pytest.fixture(scope="module")
+def paged_model():
+    cfg = ModelConfig(name="paged", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=61,
+                      backend="xla", kernel_block_s=PS, **F32).validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def paged_tables(paged_model):
+    cfg, params = paged_model
+    fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+    topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=8, w_max=8,
+                               batch=cfg.vocab_size)
+    uni = build_unigram(params["embed"]["embedding"],
+                        params["embed"]["lm_head"], k_max=8)
+    return NGramTables(uni, topk, chain)
+
+
+# ---------------------------------------------------------------------------
+# (a) free-list / page-table unit behaviour
+# ---------------------------------------------------------------------------
+def _unit_state(paged_model, batch=3, num_pages=10, pps=5):
+    cfg, _ = paged_model
+    return C.init_paged_state(cfg, batch, num_pages, PS, pps)
+
+
+def test_alloc_free_invariants(paged_model):
+    st = _unit_state(paged_model)
+    st = C.alloc_slot_pages(st, jnp.int32(0), 2)
+    st = C.alloc_slot_pages(st, jnp.int32(1), 3)
+    C.check_page_invariants(st)
+    assert int(st["free_top"]) == 5
+    st = C.free_slot_pages(st, jnp.int32(0))
+    C.check_page_invariants(st)
+    st = C.free_slot_pages(st, jnp.int32(0))     # idempotent double free
+    C.check_page_invariants(st)
+    assert int(st["free_top"]) == 7
+    st = C.free_slot_pages(st, jnp.int32(1))
+    assert int(st["free_top"]) == 10
+
+
+def test_grow_pages_batched(paged_model):
+    st = _unit_state(paged_model)
+    st = C.grow_pages(st, jnp.asarray([3 * PS, PS + 1, 9]),
+                      jnp.asarray([True, True, False]))
+    np.testing.assert_array_equal(np.asarray(st["n_pages"]), [3, 2, 0])
+    C.check_page_invariants(st)
+    # growth is incremental: already-covered rows take nothing
+    st2 = C.grow_pages(st, jnp.asarray([3 * PS, PS + 1, 9]),
+                       jnp.asarray([True, True, True]))
+    np.testing.assert_array_equal(np.asarray(st2["n_pages"]), [3, 2, 1])
+    C.check_page_invariants(st2)
+
+
+def test_phys_slots_sentinel(paged_model):
+    st = _unit_state(paged_model, batch=1, num_pages=4, pps=3)
+    st = C.alloc_slot_pages(st, jnp.int32(0), 2)
+    pt = np.asarray(st["page_table"])[0]
+    pos = jnp.asarray([[0, PS - 1, PS, 2 * PS, -1, 99]])
+    ph = np.asarray(C.phys_slots(st["page_table"], pos, PS, 4))
+    assert ph[0, 0] == pt[0] * PS
+    assert ph[0, 1] == pt[0] * PS + PS - 1
+    assert ph[0, 2] == pt[1] * PS
+    assert ph[0, 3] == 4 * PS        # unallocated page -> OOB sentinel
+    assert ph[0, 4] == 4 * PS        # negative position -> OOB sentinel
+    assert ph[0, 5] == 4 * PS        # beyond the table  -> OOB sentinel
+
+
+def test_fragmentation_churn_no_leak(paged_model):
+    """Many interleaved alloc/grow/free cycles leave the free list exactly
+    partitioning the pool (the page table gets arbitrarily scrambled —
+    that fragmentation is the layout's normal operating state)."""
+    rng = np.random.default_rng(0)
+    st = _unit_state(paged_model, batch=4, num_pages=24, pps=6)
+    live = {}
+    for it in range(200):
+        slot = int(rng.integers(0, 4))
+        if slot in live and rng.random() < 0.5:
+            st = C.free_slot_pages(st, jnp.int32(slot))
+            del live[slot]
+        elif slot not in live:
+            n = int(rng.integers(1, 4))
+            free = int(np.asarray(st["free_top"]))
+            if free >= n:
+                st = C.alloc_slot_pages(st, jnp.int32(slot), n)
+                live[slot] = n
+        else:                       # grow the live slot by one page
+            want = (live[slot] + 1) * PS
+            if int(np.asarray(st["free_top"])) >= 1 and live[slot] < 6:
+                act = jnp.arange(4) == slot
+                st = C.grow_pages(st, jnp.full((4,), want), act)
+                live[slot] += 1
+        C.check_page_invariants(st)
+    for slot in list(live):
+        st = C.free_slot_pages(st, jnp.int32(slot))
+    C.check_page_invariants(st)
+    assert int(st["free_top"]) == 24, "leaked pages after churn"
+
+
+# ---------------------------------------------------------------------------
+# (b) paged kernel == linear kernel on the gathered view
+# ---------------------------------------------------------------------------
+def test_paged_kernel_matches_linear_gather():
+    rng = np.random.default_rng(0)
+    B, K, W1, H, KV, hd, NP, PPS = 2, 3, 4, 4, 2, 16, 12, 4
+    sh = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    q, kt, vt = sh(B, K, W1, H, hd), sh(B, K, W1, KV, hd), sh(B, K, W1, KV, hd)
+    kp, vp = sh(NP, PS, KV, hd), sh(NP, PS, KV, hd)
+    pt = jnp.asarray([[5, 2, 9, -1], [0, 7, -1, -1]], jnp.int32)
+    cur = jnp.asarray([3 * PS - 2, PS + 5], jnp.int32)
+    pid = jnp.clip(pt, 0, NP - 1)
+    k_lin = kp[pid].reshape(B, PPS * PS, KV, hd)
+    v_lin = vp[pid].reshape(B, PPS * PS, KV, hd)
+    lin = ops.spec_attention_op(q, k_lin, v_lin, kt, vt, cur, w1=W1,
+                                block_s=PS, interpret=True)
+    paged = ops.paged_spec_attention_op(q, kp, vp, pt, kt, vt, cur, w1=W1,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(lin), np.asarray(paged))
+    ref = ops.spec_attention_ref_op(q, k_lin, v_lin, kt, vt, cur, w1=W1)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# (c) generate() / step() parity: linear vs paged, xla vs pallas
+# ---------------------------------------------------------------------------
+STRATEGIES = ["greedy", "bigram", "unigram", "context", "mixed"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_generate_parity_linear_vs_paged(paged_model, paged_tables, strategy):
+    cfg, params = paged_model
+    B, P, N = 2, 10, 20
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    spec = SpecConfig(k=4, w=3, q=1, strategy=strategy, max_new_tokens=N)
+    buf_l, len_l, stats_l = generate(params, cfg, spec, prompt, paged_tables)
+    buf_p, len_p, stats_p = generate(params, cfg, spec, prompt, paged_tables,
+                                     paged=PagedConfig(page_size=PS))
+    np.testing.assert_array_equal(np.asarray(len_l), np.asarray(len_p))
+    n = P + N
+    np.testing.assert_array_equal(np.asarray(buf_l[:, :n]),
+                                  np.asarray(buf_p[:, :n]))
+    for key in stats_l:
+        np.testing.assert_array_equal(np.asarray(stats_l[key]),
+                                      np.asarray(stats_p[key]),
+                                      err_msg=f"stats[{key}]")
+    ref = greedy_reference(params, cfg, prompt, N)
+    np.testing.assert_array_equal(np.asarray(buf_p[:, :n]), np.asarray(ref))
+
+
+@pytest.mark.parametrize("strategy", ["context", "mixed"])
+def test_generate_paged_backend_parity(paged_model, paged_tables, strategy):
+    """xla vs pallas-interpret on the PAGED layout, bit for bit."""
+    cfg, params = paged_model
+    B, P, N = 2, 10, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (B, P), 0,
+                                cfg.vocab_size)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        c = dataclasses.replace(cfg, backend=backend).validate()
+        spec = SpecConfig(k=3, w=3, q=1, strategy=strategy, max_new_tokens=N,
+                          backend=backend)
+        buf, blen, _ = generate(params, c, spec, prompt, paged_tables,
+                                paged=PagedConfig(page_size=PS))
+        assert (np.asarray(blen) == P + N).all()
+        outs[backend] = np.asarray(buf[:, :P + N])
+    np.testing.assert_array_equal(outs["xla"], outs["pallas"])
+    ref = greedy_reference(params, cfg, prompt, N)
+    np.testing.assert_array_equal(outs["pallas"], np.asarray(ref))
+
+
+def test_paged_generate_hybrid_arch():
+    """Paged pool + gated-replay commit: attention layer inside a recurrent
+    (Jamba-pattern) stack, pallas backend."""
+    cfg = ModelConfig(
+        name="hyb-paged", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=61,
+        block_pattern=(BlockSpec("mamba", "swiglu"),
+                       BlockSpec("attn", "swiglu")),
+        backend="pallas", kernel_block_s=PS, **F32).validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, P, N = 2, 8, 10
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=3, w=3, strategy="context", max_new_tokens=N,
+                      backend="pallas")
+    buf, _, _ = generate(params, cfg, spec, prompt, None,
+                         paged=PagedConfig(page_size=PS))
+    np.testing.assert_array_equal(np.asarray(buf[:, :P + N]),
+                                  np.asarray(ref))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_step_parity_linear_vs_paged(paged_model, paged_tables, strategy):
+    """ServingEngine.step() (admit -> spec_step -> retire, staggered
+    arrivals) returns identical per-request outputs in both layouts."""
+    cfg, params = paged_model
+    spec = SpecConfig(k=4, w=3, q=1, strategy=strategy, max_new_tokens=12)
+    tables = paged_tables if strategy != "greedy" else None
+    outs = {}
+    for mode in ("linear", "paged"):
+        eng = ServingEngine(params, cfg, spec, tables=tables, max_batch=2,
+                            buckets=(16,), max_new_cap=12, bucket_align=1,
+                            paged=(mode == "paged"), page_size=PS)
+        r1 = eng.submit("layout parity", max_new_tokens=12)
+        r2 = eng.submit("one step behind", max_new_tokens=7)
+        eng.step()
+        r3 = eng.submit("late arrival", max_new_tokens=9)
+        done = eng.serve_continuous()
+        assert sorted(r.request_id for r in done) == \
+            sorted(r.request_id for r in (r1, r2, r3))
+        outs[mode] = {r.prompt: np.asarray(r.output_ids) for r in done}
+        if mode == "paged":
+            C.check_page_invariants(eng._cont_state.model)
+            assert eng.pool_stats()["free_pages"] == \
+                eng.pool_stats()["num_pages"], "pages leaked after drain"
+    for prompt in outs["linear"]:
+        np.testing.assert_array_equal(outs["linear"][prompt],
+                                      outs["paged"][prompt], err_msg=prompt)
+
+
+@pytest.mark.slow
+def test_step_paged_backend_parity(paged_model, paged_tables):
+    """xla vs pallas-interpret through the paged ServingEngine.step()."""
+    cfg, params = paged_model
+    outs = {}
+    for backend in ("xla", "pallas"):
+        c = dataclasses.replace(cfg, backend=backend).validate()
+        spec = SpecConfig(k=3, w=3, strategy="mixed", max_new_tokens=10,
+                          backend=backend)
+        eng = ServingEngine(params, c, spec, tables=paged_tables,
+                            max_batch=2, buckets=(16,), max_new_cap=10,
+                            bucket_align=1, paged=True, page_size=PS)
+        eng.submit("backend parity", max_new_tokens=10)
+        eng.submit("second row", max_new_tokens=8)
+        done = eng.serve_continuous()
+        outs[backend] = {r.prompt: np.asarray(r.output_ids) for r in done}
+    for prompt in outs["xla"]:
+        np.testing.assert_array_equal(outs["xla"][prompt],
+                                      outs["pallas"][prompt], err_msg=prompt)
+
+
+# ---------------------------------------------------------------------------
+# (d) pool-limited serving: long context among shorts, churn, no leaks
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_long_context_coexists_in_pool_linear_could_not_fit(paged_model,
+                                                            paged_tables):
+    """One long-context request rides with a stream of short ones in a pool
+    SMALLER than linear worst-case sizing (which charges every slot the
+    long request's buffer), with bit-correct outputs and zero leaks."""
+    cfg, params = paged_model
+    spec = SpecConfig(k=4, w=3, strategy="mixed", max_new_tokens=8)
+    max_batch, long_bucket, short_bucket, cap = 3, 64, 16, 8
+    # linear worst case: every slot pays the long bucket
+    linear_pages = max_batch * int(
+        C.pages_for_len(long_bucket + cap + spec.w + 2, PS))
+    num_pages = linear_pages - 5
+    eng = ServingEngine(params, cfg, spec, tables=paged_tables,
+                        max_batch=max_batch, buckets=(short_bucket,
+                                                      long_bucket),
+                        max_new_cap=cap, bucket_align=1, paged=True,
+                        page_size=PS, num_pages=num_pages)
+    long_req = eng.submit("L" * 40, max_new_tokens=cap)    # 64-bucket
+    shorts = [eng.submit(f"short {i}", max_new_tokens=cap)
+              for i in range(6)]
+    done = eng.serve_continuous()
+    stats = eng.pool_stats()
+    assert stats["num_pages"] < linear_pages
+    assert stats["peak_pages"] <= stats["num_pages"]
+    assert stats["free_pages"] == stats["num_pages"], "leaked pages"
+    assert stats["rejected"] == 0
+    C.check_page_invariants(eng._cont_state.model)
+    assert len(done) == 7
+    # outputs match per-request references (pool pressure never corrupts)
+    for req in [long_req] + shorts:
+        got = next(r for r in done if r.request_id == req.request_id)
+        padded = eng.scheduler.pad_to_bucket(eng.tok.encode(req.prompt))[None]
+        ref = greedy_reference(params, cfg, jnp.asarray(padded), cap)
+        np.testing.assert_array_equal(
+            got.output_ids, np.asarray(ref[0, padded.shape[1]:]),
+            err_msg=req.prompt)
+
+
+@pytest.mark.slow
+def test_serving_churn_no_page_leak(paged_model, paged_tables):
+    """Slot-reuse churn (3 waves through 2 slots) returns every page."""
+    cfg, params = paged_model
+    spec = SpecConfig(k=3, w=3, strategy="mixed", max_new_tokens=6)
+    eng = ServingEngine(params, cfg, spec, tables=paged_tables, max_batch=2,
+                        buckets=(16,), max_new_cap=6, bucket_align=1,
+                        paged=True, page_size=PS)
+    for wave in range(3):
+        for i in range(2):
+            eng.submit(f"wave {wave} req {i}", max_new_tokens=6)
+        done = eng.serve_continuous()
+        assert len(done) == 2
+        C.check_page_invariants(eng._cont_state.model)
+        st = eng.pool_stats()
+        assert st["free_pages"] == st["num_pages"], f"leak after wave {wave}"
