@@ -21,8 +21,17 @@ throughput + latency as above, plus resident KV in token-positions per
 layer (linear: max_batch * buf_size, always; paged: peak pages * page
 size), deferral count and the leak check.  Writes ``BENCH_paged.json``.
 
+``--adaptive`` benchmarks the in-flight adaptive (k, w) controller
+(DESIGN.md §9) against every static arm of its table: the same Poisson
+workload is served continuously once per static arm and once with
+per-slot UCB arm masking, and the report gives each arm's throughput and
+tokens/call plus the adaptive run's REGRET vs the best static arm (how
+much throughput exploration cost) and its pull distribution.  Writes
+``BENCH_adaptive.json``.
+
 Run:  PYTHONPATH=src python -m benchmarks.continuous_batching [--n 24]
       PYTHONPATH=src python -m benchmarks.continuous_batching --paged
+      PYTHONPATH=src python -m benchmarks.continuous_batching --adaptive
 """
 from __future__ import annotations
 
@@ -55,14 +64,18 @@ def make_workload(n: int, rate_hz: float, seed: int = 0
             for i in range(n)]
 
 
-def _summary(lat: Dict[int, float], toks: int, busy_s: float) -> Dict:
+def _summary(lat: Dict[int, float], toks: int, busy_s: float,
+             calls: int = 0) -> Dict:
     ls = np.asarray(sorted(lat.values()))
-    return {"requests": len(ls),
-            "new_tokens": toks,
-            "busy_wall_s": round(busy_s, 3),
-            "throughput_tok_s": round(toks / max(busy_s, 1e-9), 2),
-            "p50_latency_s": round(float(np.percentile(ls, 50)), 4),
-            "p99_latency_s": round(float(np.percentile(ls, 99)), 4)}
+    out = {"requests": len(ls),
+           "new_tokens": toks,
+           "busy_wall_s": round(busy_s, 3),
+           "throughput_tok_s": round(toks / max(busy_s, 1e-9), 2),
+           "p50_latency_s": round(float(np.percentile(ls, 50)), 4),
+           "p99_latency_s": round(float(np.percentile(ls, 99)), 4)}
+    if calls:
+        out["tokens_per_call"] = round(toks / calls, 3)
+    return out
 
 
 def run_static(eng, workload) -> Dict:
@@ -100,6 +113,7 @@ def run_continuous(eng, workload) -> Dict:
     arrival: Dict[int, float] = {}
     latency: Dict[int, float] = {}
     toks = 0
+    calls = 0
     busy = 0.0
     t0 = time.perf_counter()
     while pending or eng.scheduler.pending() or eng.in_flight():
@@ -117,7 +131,8 @@ def run_continuous(eng, workload) -> Dict:
         for r in retired:
             latency[r.request_id] = done_t - arrival[r.request_id]
             toks += r.stats["new_tokens"]
-    return _summary(latency, toks, busy)
+            calls += r.stats.get("model_calls", 0)
+    return _summary(latency, toks, busy, calls)
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +229,99 @@ def run_paged(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
     return res
 
 
+# ---------------------------------------------------------------------------
+# adaptive (k, w) regret vs the best static arm (--adaptive): BENCH_adaptive
+# ---------------------------------------------------------------------------
+# a compact arm ladder: greedy, a cheap shallow arm, the paper's sweet spot
+# region, and an aggressive deep arm (kept small so the CPU nightly finishes)
+ADAPT_ARMS = ((1, 0), (4, 2), (8, 4), (8, 8))
+
+
+def run_adaptive(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
+                 seed: int = 0) -> Dict:
+    ensure_dirs()
+    cfg, params = get_trained()
+    arm_k = max(a[0] for a in ADAPT_ARMS)
+    arm_w = max(a[1] for a in ADAPT_ARMS)
+    tables = get_tables(cfg, params, k_max=max(16, arm_k),
+                        w_max=max(10, arm_w))
+    cap = max(MAX_NEW_CHOICES)
+
+    def make_engine(arm=None):
+        """arm=None: the adaptive engine; else one static-arm engine."""
+        if arm is None:
+            spec = SpecConfig(k=arm_k, w=arm_w, strategy="mixed",
+                              max_new_tokens=cap)
+            return ServingEngine(params, cfg, spec, tables=tables,
+                                 max_batch=max_batch, buckets=BUCKETS,
+                                 max_new_cap=cap, adaptive=True,
+                                 arms=ADAPT_ARMS)
+        k, w = arm
+        spec = (SpecConfig(strategy="greedy", max_new_tokens=cap) if w == 0
+                else SpecConfig(k=k, w=w, strategy="mixed",
+                                max_new_tokens=cap))
+        return ServingEngine(params, cfg, spec, tables=tables,
+                             max_batch=max_batch, buckets=BUCKETS,
+                             max_new_cap=cap)
+
+    res = {"workload": {"n": n, "rate_hz": rate_hz, "seed": seed,
+                        "max_batch": max_batch, "buckets": list(BUCKETS),
+                        "arms": [list(a) for a in ADAPT_ARMS]},
+           "static_arms": {}}
+    workload = make_workload(n, rate_hz, seed)
+    for arm in ADAPT_ARMS:
+        eng = make_engine(arm)
+        eng.submit("warmup", max_new_tokens=min(MAX_NEW_CHOICES))
+        eng.serve_continuous()
+        res["static_arms"][f"k{arm[0]}_w{arm[1]}"] = run_continuous(
+            eng, workload)
+    eng = make_engine()
+    eng.submit("warmup", max_new_tokens=min(MAX_NEW_CHOICES))
+    eng.serve_continuous()
+    eng.reset_pool_counters()     # pull counts measure the workload window
+    adaptive = run_continuous(eng, workload)
+    pulls = eng.adaptive_stats()["pulls_retired"]
+    adaptive["arm_pulls"] = pulls
+    res["adaptive"] = adaptive
+    # Two regret views.  (a) raw wall-clock: on CPU this structurally
+    # favours the small static arms, because the masked step always pays
+    # the (k_max, w_max)-shaped verify compute whichever arm a slot picks —
+    # the roofline says exactly those extra rows/positions are bandwidth-
+    # free on TPU, which is the hardware the masking trades for.  (b) the
+    # bandit's own objective, tokens-per-call / roofline slowdown: per-arm
+    # scores for the static runs vs the adaptive run's pull-weighted
+    # realized score — hardware-independent, and the number that should
+    # approach zero regret as the workload grows.
+    from repro.core.controller import arm_slowdowns
+    slow = arm_slowdowns(cfg, ADAPT_ARMS)
+    scores = {}
+    for arm, s in zip(ADAPT_ARMS, slow):
+        r = res["static_arms"][f"k{arm[0]}_w{arm[1]}"]
+        scores[f"k{arm[0]}_w{arm[1]}"] = round(
+            r["tokens_per_call"] / s, 4)
+    w_slow = (sum(p * s for p, s in zip(pulls, slow))
+              / max(sum(pulls), 1))
+    adaptive_score = round(adaptive["tokens_per_call"] / w_slow, 4)
+    best_arm, best = max(res["static_arms"].items(),
+                         key=lambda kv: kv[1]["throughput_tok_s"])
+    best_score_arm = max(scores, key=scores.get)
+    res["regret"] = {
+        "best_static_arm_wallclock": best_arm,
+        "throughput_regret_tok_s": round(
+            best["throughput_tok_s"] - adaptive["throughput_tok_s"], 2),
+        "modeled_scores": scores,
+        "adaptive_modeled_score": adaptive_score,
+        "best_static_arm_modeled": best_score_arm,
+        # positive = exploration cost; near zero = the bandit matched the
+        # best static arm under its objective
+        "modeled_regret": round(scores[best_score_arm] - adaptive_score, 4),
+        "modeled_regret_frac": round(
+            1.0 - adaptive_score / max(scores[best_score_arm], 1e-9), 4)}
+    with open("BENCH_adaptive.json", "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
 def run(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
         seed: int = 0) -> Dict:
     ensure_dirs()
@@ -263,7 +371,29 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="run the paged long-context arrival mix and write "
                          "BENCH_paged.json (linear vs paged KV layouts)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="benchmark per-slot adaptive (k, w) continuous "
+                         "serving against every static arm of its table "
+                         "and write BENCH_adaptive.json (regret report)")
     args = ap.parse_args()
+    if args.adaptive:
+        res = run_adaptive(args.n, args.rate, args.max_batch, args.seed)
+        print("mode,throughput_tok_s,tokens_per_call,p50_latency_s")
+        for name, r in res["static_arms"].items():
+            print(f"{name},{r['throughput_tok_s']},"
+                  f"{r.get('tokens_per_call', 0)},{r['p50_latency_s']}")
+        r = res["adaptive"]
+        print(f"adaptive,{r['throughput_tok_s']},"
+              f"{r.get('tokens_per_call', 0)},{r['p50_latency_s']}")
+        rg = res["regret"]
+        print(f"modeled scores (tokens/call / roofline slowdown): "
+              f"{rg['modeled_scores']} | adaptive "
+              f"{rg['adaptive_modeled_score']} -> modeled regret "
+              f"{rg['modeled_regret']} ({rg['modeled_regret_frac']:.1%} "
+              f"of best arm {rg['best_static_arm_modeled']})")
+        print(f"adaptive arm pulls: {r['arm_pulls']}")
+        print("wrote BENCH_adaptive.json")
+        return
     if args.paged:
         res = run_paged(args.n, args.rate, args.max_batch, args.seed)
         print("mode,throughput_tok_s,p50_latency_s,p99_latency_s,"

@@ -2,7 +2,7 @@
 
 The paper sweeps a static (k, w) grid offline and notes (§5.2) that smarter
 strategy allocation "could yield further gains".  This controller picks the
-strategy ONLINE, per served batch, from a small set of precompiled arms:
+strategy ONLINE from a small set of arms:
 
     score(arm) = EMA_tokens_per_call(arm) / roofline_slowdown(arm | ell)
 
@@ -10,12 +10,25 @@ i.e. measured acceptance divided by the modeled call-time inflation
 (core/phase.py), with a UCB exploration bonus.  Arms are a fixed list so the
 jitted engine never recompiles outside the precompiled set (a TPU serving
 requirement).
+
+Two implementations share the scoring rule:
+
+  - ``AdaptiveKW`` — the host-side bandit: one arm per whole *batch*
+    (serve_all picks before launching a monolithic ``generate``).
+  - the vectorized per-slot bandit (``init_arm_stats`` / ``choose_arms`` /
+    ``update_arm_stats``) — pure jnp ops over (B, A) stat arrays that live
+    inside ``DecodeState.stats`` and run *inside* the jitted ``spec_step``
+    (DESIGN.md §9).  Every slot keeps its own counts/rewards, so a
+    continuous-batching engine adapts per request in flight; admission and
+    release zero a slot's rows, so a reused slot starts exploring afresh.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
 
 from ..models.config import ModelConfig
 from .phase import slowdown
@@ -82,3 +95,78 @@ class AdaptiveKW:
         return max(self.arms,
                    key=lambda a: (self.stats[a].tpc if self.stats[a].pulls
                                   else 0.0) / self.slow[a])
+
+
+# ---------------------------------------------------------------------------
+# vectorized per-slot bandit (runs INSIDE the jitted spec_step)
+# ---------------------------------------------------------------------------
+# One pull == one verify call of one slot, rewarded with the tokens that
+# call committed (n_commit, bonus included) — the per-call analogue of
+# AdaptiveKW's whole-batch tokens/calls EMA.  All state is (B, A)-shaped
+# arrays keyed into DecodeState.stats, so it is donated, slot-resettable
+# with the rest of the per-slot stats, and needs no host round-trip.
+ARM_STAT_KEYS = ("arm_pulls", "arm_reward", "arm_last")
+
+# scores are f32; any finite exploit score is < _UNPULLED, so unpulled arms
+# are explored first in index order (AdaptiveKW's infinite-bonus behaviour)
+_UNPULLED = 1e30
+
+
+def init_arm_stats(num_slots: int, num_arms: int) -> Dict[str, jnp.ndarray]:
+    """Fresh per-slot bandit state: zero pulls/rewards for every arm."""
+    return {
+        "arm_pulls": jnp.zeros((num_slots, num_arms), jnp.int32),
+        "arm_reward": jnp.zeros((num_slots, num_arms), jnp.float32),
+        "arm_last": jnp.zeros((num_slots,), jnp.int32),
+    }
+
+
+def arm_slowdowns(cfg: ModelConfig, arms: Tuple[Tuple[int, int], ...],
+                  ell: int = 512) -> Tuple[float, ...]:
+    """Roofline call-slowdown prior per arm (the denominator of the score).
+
+    Host-side floats computed from static shapes, so they fold into the jit
+    as constants — no recompilation across steps or arm switches.
+    """
+    return tuple(slowdown(cfg, ell, k, w) if (k, w) != (1, 0) else 1.0
+                 for (k, w) in arms)
+
+
+def choose_arms(stats: Dict[str, jnp.ndarray],
+                slowdowns: Tuple[float, ...],
+                explore: float = 0.3) -> jnp.ndarray:
+    """UCB arm per slot from (B, A) stats; ties break to the lowest index.
+
+    score = EMA_tokens_per_call / slowdown + explore * sqrt(log(T)/pulls),
+    with never-pulled arms forced first in index order (the vectorized
+    rendering of AdaptiveKW's infinite exploration bonus).  Rows are fully
+    independent: slot b's choice reads only stats[b].
+    """
+    pulls = stats["arm_pulls"]                              # (B, A) int32
+    pulled = pulls > 0
+    total = pulls.sum(axis=1, keepdims=True)                # per-slot T
+    bonus = explore * jnp.sqrt(
+        jnp.log(total.astype(jnp.float32) + 1.0)
+        / jnp.maximum(pulls.astype(jnp.float32), 1.0))
+    slow = jnp.asarray(slowdowns, jnp.float32)[None, :]
+    score = jnp.where(pulled, stats["arm_reward"] / slow + bonus,
+                      _UNPULLED)
+    return jnp.argmax(score, axis=1).astype(jnp.int32)
+
+
+def update_arm_stats(stats: Dict[str, jnp.ndarray], arm: jnp.ndarray,
+                     reward: jnp.ndarray, active: jnp.ndarray,
+                     ema: float = 0.9) -> Dict[str, jnp.ndarray]:
+    """Record one pull of ``arm[b]`` with ``reward[b]`` tokens for every
+    active slot (inactive rows are untouched, like the per-slot call/token
+    stats).  First pull seeds the EMA with the raw reward (AdaptiveKW)."""
+    A = stats["arm_pulls"].shape[1]
+    sel = (jnp.arange(A)[None, :] == arm[:, None]) & active[:, None]
+    first = stats["arm_pulls"] == 0
+    reward = reward.astype(jnp.float32)[:, None]
+    blended = jnp.where(first, reward,
+                        ema * stats["arm_reward"] + (1.0 - ema) * reward)
+    return {**stats,
+            "arm_pulls": stats["arm_pulls"] + sel.astype(jnp.int32),
+            "arm_reward": jnp.where(sel, blended, stats["arm_reward"]),
+            "arm_last": jnp.where(active, arm, stats["arm_last"])}

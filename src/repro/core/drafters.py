@@ -172,6 +172,46 @@ def context_ngram_draft(buf: jnp.ndarray, cur_len: jnp.ndarray, q: int,
 
 
 # ----------------------------------------------------------------------------
+# multi-depth drafting (adaptive arm masking, DESIGN.md §9)
+# ----------------------------------------------------------------------------
+def multi_depth_draft(draft_fn, ws: Tuple[int, ...], w_max: int,
+                      widx: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Draft at every distinct masked depth and select per slot.
+
+    ``draft_fn(w) -> (drafts (B,k,w), valid (B,k), n_ctx (B,))`` is invoked
+    once per depth in ``ws`` (a static tuple, so every depth's sweep
+    compiles into the SAME jitted step — per-slot arm switches can never
+    trigger a recompile).  Each result is zero-padded to ``w_max`` and slot
+    b takes the drafts of depth ``ws[widx[b]]``.
+
+    Depth matters beyond truncation only for the context N-gram: its
+    continuation hash and match guard are functions of w, so a depth-w_b
+    draft inside a (k_max, w_max) step must come from a genuine depth-w_b
+    sweep to be bit-identical to a dedicated (k, w_b) run.  The model-
+    derived drafters are prefix-consistent in w (argmax chains), but are
+    still routed through here so every strategy shares one parity story.
+    Tokens past a slot's masked depth are zeros; they are never accepted
+    (verify.accept gates on w_eff) and never committed.
+    """
+    ds, vs, ns = [], [], []
+    for w in ws:
+        d, v, n = draft_fn(w)
+        ds.append(jnp.pad(d, ((0, 0), (0, 0), (0, w_max - w))))
+        vs.append(v)
+        ns.append(n)
+    if len(ws) == 1:                       # single depth: nothing to select
+        return ds[0], vs[0], ns[0]
+    sel = widx[:, None, None, None]
+    drafts = jnp.take_along_axis(jnp.stack(ds, axis=1), sel, axis=1)[:, 0]
+    valid = jnp.take_along_axis(jnp.stack(vs, axis=1), sel[..., 0],
+                                axis=1)[:, 0]
+    n_ctx = jnp.take_along_axis(jnp.stack(ns, axis=1), widx[:, None],
+                                axis=1)[:, 0]
+    return drafts, valid, n_ctx
+
+
+# ----------------------------------------------------------------------------
 # mixed strategy (paper §4.3)
 # ----------------------------------------------------------------------------
 def mixed_draft(tables: NGramTables, buf: jnp.ndarray, cur_len: jnp.ndarray,

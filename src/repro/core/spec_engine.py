@@ -31,6 +31,13 @@ Statistics mirror the paper's ablations (Fig. 4): acceptance-length
 histogram, winning-rank histogram, context/bigram allocation and
 per-strategy accepted tokens.  Stats are per-slot; ``admit_slot`` zeroes a
 slot's row so a continuous engine reads them per-request at retirement.
+
+In-flight adaptive (k, w) (DESIGN.md §9): ``SpecConfig.arms`` turns (k, w)
+into compile-time maxima and every step each slot picks one arm by
+per-slot UCB (core/controller.py) and is MASKED down to it — bit-identical
+to a dedicated static step of that arm, with zero recompiles across arm
+switches.  The bandit's (B, A) state rides in ``DecodeState.stats`` and is
+zeroed with the rest of the slot's stats on admission/release.
 """
 from __future__ import annotations
 
@@ -45,8 +52,10 @@ from ..kernels import dispatch
 from ..models import cache as C
 from ..models import model as M
 from ..models.config import ModelConfig
+from .controller import (arm_slowdowns, choose_arms, init_arm_stats,
+                         update_arm_stats)
 from .drafters import (bigram_draft, context_ngram_draft, mixed_draft,
-                       unigram_draft)
+                       multi_depth_draft, unigram_draft)
 from .ngram_tables import NGramTables
 from .verify import accept
 
@@ -81,6 +90,37 @@ class SpecConfig:
     # (The verify call's backend is ModelConfig.backend: it lives in the
     # model, not the drafter.)
     backend: str = "auto"
+    # In-flight adaptive (k, w) (DESIGN.md §9): a static table of
+    # (k_arm, w_arm) arms, each within [1, k] x [0, w].  When set, (k, w)
+    # become the COMPILE-TIME maxima of the step's shapes; every step each
+    # slot picks one arm by per-slot UCB (core/controller.py) and is masked
+    # down to it — bit-identical to a dedicated (k_arm, w_arm) step, with
+    # zero recompiles across arm switches.  (k_arm, w_arm) == (1, 0) is
+    # plain greedy decoding.  The per-slot bandit state lives in
+    # DecodeState.stats and is zeroed on slot admission/release.
+    arms: Optional[Tuple[Tuple[int, int], ...]] = None
+    adapt_explore: float = 0.3  # UCB exploration coefficient
+    adapt_ema: float = 0.9      # per-arm tokens-per-call EMA decay
+    adapt_ell: int = 512        # context length of the roofline prior
+
+    def validate_arms(self) -> "SpecConfig":
+        """Raise unless the arm table fits the compile-time (k, w) box."""
+        if self.arms is None:
+            return self
+        if self.strategy == "greedy":
+            raise ValueError(
+                "arms require a drafting strategy (the greedy arm (1, 0) "
+                "is expressed inside the masked step, not via "
+                "strategy='greedy')")
+        if not self.arms:
+            raise ValueError("arms must be a non-empty tuple")
+        for a in self.arms:
+            ka, wa = a
+            if not (1 <= ka <= self.k and 0 <= wa <= self.w):
+                raise ValueError(
+                    f"arm {a} outside the compile-time box "
+                    f"[1, {self.k}] x [0, {self.w}]")
+        return self
 
 
 @functools.partial(
@@ -137,7 +177,7 @@ def _draft(spec: SpecConfig, tables: NGramTables, buf, buf_len, last):
 
 
 def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
-    return {
+    st = {
         "calls": jnp.zeros((B,), jnp.int32),
         "tokens": jnp.zeros((B,), jnp.int32),
         "accept_hist": jnp.zeros((B, spec.w + 2), jnp.int32),   # n_commit 0..w+1
@@ -146,6 +186,34 @@ def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
         "accepted_ctx": jnp.zeros((B,), jnp.int32),             # drafted tokens
         "accepted_bigram": jnp.zeros((B,), jnp.int32),          # accepted per src
     }
+    if spec.arms is not None:
+        # per-slot bandit state rides in the stats dict: donated with the
+        # DecodeState and zeroed by the same slot-reset sweep as the
+        # call/token counters (admission AND release)
+        st.update(init_arm_stats(B, len(spec.arms)))
+    return st
+
+
+def _draft_adaptive(spec: SpecConfig, tables: Optional[NGramTables],
+                    buf, buf_len, last, arm):
+    """Arm-masked drafting: (k_max, w_max) candidates for every slot.
+
+    One genuine draft per distinct positive arm depth (the context sweep's
+    hash is a function of w — see drafters.multi_depth_draft), selected per
+    slot by its chosen arm.  An all-greedy arm table drafts nothing.
+    """
+    B = buf.shape[0]
+    sw = dispatch.unique_sweep_widths(spec.arms)
+    if not sw:                              # every arm is (k, 0): greedy
+        return (jnp.zeros((B, spec.k, spec.w), jnp.int32),
+                jnp.zeros((B, spec.k), bool),
+                jnp.zeros((B,), jnp.int32))
+    widx = jnp.asarray([sw.index(w) if w > 0 else 0
+                        for _, w in spec.arms], jnp.int32)[arm]
+    draft_fn = lambda w: _draft(
+        dataclasses.replace(spec, w=w, arms=None), tables, buf, buf_len,
+        last)
+    return multi_depth_draft(draft_fn, sw, spec.w, widx)
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +228,7 @@ def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
     tables instead of per-slot linear buffers; ``buf_size`` (the token
     buffer / logical KV capacity per slot) is rounded up to whole pages.
     """
+    spec.validate_arms()
     B = num_slots
     if paged is not None:
         ps = paged.resolve_page_size(cfg)
@@ -199,6 +268,7 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
     ``generate`` can never exhaust it — pool pressure is a serving concern
     (ServingEngine's page-reservation admission).
     """
+    spec.validate_arms()
     B, P = prompt.shape
     budget = (jnp.full((B,), spec.max_new_tokens, jnp.int32)
               if max_new_tokens is None
@@ -280,7 +350,9 @@ def admit_slot(params, cfg: ModelConfig, state: DecodeState,
     row = jnp.zeros((L,), jnp.int32)
     row = jax.lax.dynamic_update_slice(row, prompt.astype(jnp.int32), (0,))
     row = row.at[P].set(first)
-    stats = {k: v.at[slot].set(0) for k, v in state.stats.items()}
+    # zero every per-slot stats row — including the adaptive bandit's
+    # per-arm pulls/rewards, so a reused slot starts exploring afresh
+    stats = C.zero_slot_stats(state.stats, slot)
     stats["tokens"] = stats["tokens"].at[slot].set(1)
     if paged:
         ps = C.paged_dims(state.model)[1]
@@ -306,13 +378,17 @@ def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
     """Mark a retired row's slot as free.  Linear caches are overwritten on
     the next admit (see cache.reset_slot for eager scrubbing); paged caches
     return the slot's pages to the free stack NOW — reclaiming pool capacity
-    at retirement is the whole point of the paged layout."""
+    at retirement is the whole point of the paged layout.  The slot's stats
+    rows (including the adaptive bandit's per-arm state) are zeroed eagerly:
+    callers must read a retiring slot's stats BEFORE releasing it, and a
+    freed slot must not keep steering arm choices it can no longer use."""
     model = state.model
     if C.is_paged(model):
         model = C.free_slot_pages(model, slot)
     return dataclasses.replace(
         state,
         model=model,
+        stats=C.zero_slot_stats(state.stats, slot),
         active=state.active.at[slot].set(False),
         done=state.done.at[slot].set(True))
 
@@ -323,10 +399,14 @@ def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
 def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
                tables: Optional[NGramTables], s: DecodeState) -> DecodeState:
     B, L = s.buf.shape
+    adaptive = spec.arms is not None
+    if adaptive:
+        spec.validate_arms()
     if C.is_paged(s.model):
         # on-the-fly page growth: this step commits at most w+1 tokens per
         # row (positions cur_len .. cur_len+w), so cover cur_len + w + 1
-        # before the verify/commit touches the pool
+        # before the verify/commit touches the pool (w is the compile-time
+        # maximum under adaptive arms: growth is sized for the worst arm)
         act = s.active & (~s.done) & (s.buf_len - s.prompt_len < s.budget)
         s = dataclasses.replace(
             s, model=C.grow_pages(s.model,
@@ -334,13 +414,25 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
     buf_c, len_c, done_c, state_c = s.buf, s.buf_len, s.done, s.model
     st = s.stats
     last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)[:, 0]
-    drafts, valid, n_ctx = _draft(spec, tables, buf_c, len_c, last)
+    if adaptive:
+        # per-slot, per-step arm selection INSIDE the jit: UCB over the
+        # slot's own (B, A) stats, then mask the fixed (k_max, w_max)
+        # shapes down to the chosen arm — no recompile can ever occur
+        arm = choose_arms(st, arm_slowdowns(cfg, spec.arms, spec.adapt_ell),
+                          spec.adapt_explore)                   # (B,)
+        k_eff = jnp.asarray([a[0] for a in spec.arms], jnp.int32)[arm]
+        w_eff = jnp.asarray([a[1] for a in spec.arms], jnp.int32)[arm]
+        drafts, valid, n_ctx = _draft_adaptive(spec, tables, buf_c, len_c,
+                                               last, arm)
+    else:
+        arm = k_eff = w_eff = None
+        drafts, valid, n_ctx = _draft(spec, tables, buf_c, len_c, last)
     rows = jnp.concatenate(
         [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
         axis=-1)                                                # (B,k,w+1)
     logits, tails = M.verify(params, cfg, state_c, rows)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    acc = accept(drafts, greedy)
+    acc = accept(drafts, greedy, k_eff=k_eff, w_eff=w_eff)
     active = s.active & (~done_c) & (len_c - s.prompt_len < s.budget)
     budget = jnp.maximum(s.prompt_len + s.budget - len_c, 0)
     n_commit = jnp.where(active, jnp.minimum(acc.n_commit, budget), 0)
@@ -388,6 +480,10 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
         active & from_ctx, acc_drafted, 0)
     st["accepted_bigram"] = st["accepted_bigram"] + jnp.where(
         active & ~from_ctx, acc_drafted, 0)
+    if adaptive:
+        # reward the pulled arm with the tokens its call committed (bonus
+        # included — the same tokens-per-call quantity AdaptiveKW tracks)
+        st = update_arm_stats(st, arm, n_commit, active, spec.adapt_ema)
     return dataclasses.replace(s, buf=buf_n, buf_len=len_n, done=done_n,
                                model=state_n, stats=st)
 

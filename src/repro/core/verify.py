@@ -12,10 +12,19 @@ context N-gram, matching the paper's ordering).  The winner always also
 emits one *bonus* token (the model's prediction after its last accepted
 token), so every call commits n* + 1 >= 1 tokens and the output equals plain
 greedy decoding token-for-token.
+
+Per-slot arm masking (DESIGN.md §9): ``k_eff``/``w_eff`` restrict slot b to
+its arm's (k_b, w_b) sub-problem inside the shared (k_max, w_max) shapes —
+rows >= k_b can never win and acceptance is truncated at w_b, so the result
+is bit-identical to a dedicated (k_b, w_b) call (drafters are prefix-
+consistent in both k and w; attention is causal per row).  w_b == 0
+degenerates to plain greedy decoding: every row's n_acc is 0, row 0 wins,
+and the single committed token is the model's prediction after the last
+committed token.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +37,26 @@ class Acceptance(NamedTuple):
     n_acc: jnp.ndarray     # (B, k) per-row accepted-draft lengths (stats)
 
 
-def accept(drafts: jnp.ndarray, greedy: jnp.ndarray) -> Acceptance:
-    """drafts: (B, k, w) int32; greedy: (B, k, w+1) int32 argmax predictions."""
+def accept(drafts: jnp.ndarray, greedy: jnp.ndarray,
+           k_eff: Optional[jnp.ndarray] = None,
+           w_eff: Optional[jnp.ndarray] = None) -> Acceptance:
+    """drafts: (B, k, w) int32; greedy: (B, k, w+1) int32 argmax predictions.
+
+    ``k_eff`` (B,) / ``w_eff`` (B,) optionally mask slot b down to its arm's
+    (k_b, w_b): acceptance stops at draft depth w_b and rows >= k_b are
+    excluded from the winner argmax (their n_acc still reports the unmasked
+    depth-truncated value for stats).
+    """
     B, k, w = drafts.shape
     eq = drafts == greedy[..., :w]
+    if w_eff is not None:
+        eq = eq & (jnp.arange(w)[None, None, :] < w_eff[:, None, None])
     n_acc = jnp.cumprod(eq.astype(jnp.int32), axis=-1).sum(axis=-1)  # (B,k)
-    winner = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)            # (B,)
+    n_rank = n_acc
+    if k_eff is not None:
+        n_rank = jnp.where(jnp.arange(k)[None, :] < k_eff[:, None],
+                           n_acc, -1)
+    winner = jnp.argmax(n_rank, axis=-1).astype(jnp.int32)           # (B,)
     n_win = jnp.take_along_axis(n_acc, winner[:, None], axis=1)[:, 0]
     d_win = jnp.take_along_axis(drafts, winner[:, None, None],
                                 axis=1)[:, 0]                         # (B,w)

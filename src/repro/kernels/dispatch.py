@@ -51,6 +51,20 @@ def use_pallas(backend: str) -> bool:
     return resolve_backend(backend) == "pallas"
 
 
+def unique_sweep_widths(arms) -> Tuple[int, ...]:
+    """Distinct positive speculation depths of an arm table, sorted.
+
+    The adaptive spec_step (DESIGN.md §9) drafts once per depth returned
+    here — each is one statically-shaped ``ngram_sweep`` baked into the SAME
+    compiled step, because the sweep's continuation hash is a function of w.
+    This is the dispatch layer's no-recompile contract for masking: the set
+    of kernel instantiations one adaptive step contains is fixed by the arm
+    TABLE (static), never by the arms slots happen to pick at runtime.
+    w == 0 arms (plain greedy) need no sweep and contribute nothing.
+    """
+    return tuple(sorted({w for _, w in arms if w > 0}))
+
+
 def default_interpret() -> bool:
     """Pallas kernels run in interpret mode off-TPU (tests force this by
     construction: CI has no TPU, so ``backend="pallas"`` == interpret)."""
@@ -92,6 +106,12 @@ def verify_attention(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
 
     q: (B, K, W1, H, hd); caches (B, S, KV, hd); tails (B, K, W1, KV, hd);
     cur_len (B,).  Returns (B, K, W1, H, hd).
+
+    Masked-shape contract (adaptive arms, DESIGN.md §9): K/W1 are the
+    compile-time maxima; a slot running a smaller (k, w) arm simply has its
+    surplus rows/positions ignored downstream (attention is causal per row,
+    so the extra positions cannot influence the accepted prefix) — one
+    compilation serves every arm.
     """
     bs = block_s if block_s else ops.DEFAULT_BLOCK_S
     return ops.spec_attention_op(q, k_cache, v_cache, k_tail, v_tail,
@@ -107,7 +127,8 @@ def verify_attention_paged(q, k_pool, v_pool, page_table, k_tail, v_tail,
     (B, pages_per_slot) int32 (-1 = unallocated); tails (B, K, W1, KV, hd);
     cur_len (B,).  Returns (B, K, W1, H, hd).  The kernel's cache-block grid
     walks the page table (one grid step per page), so page_size plays the
-    role block_s has on the linear path.
+    role block_s has on the linear path.  The same masked-shape contract as
+    ``verify_attention`` applies: K/W1 are arm-table maxima, one compile.
     """
     return ops.paged_spec_attention_op(q, k_pool, v_pool, page_table,
                                        k_tail, v_tail, cur_len, w1=w1,

@@ -34,6 +34,12 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="serve with slot-level continuous batching instead "
                          "of static batches")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="pick (k, w) online with the UCB controller "
+                         "instead of the static --k/--w: per batch under "
+                         "static serving, per slot per step (shape-stable "
+                         "arm masking inside the one jitted spec_step, "
+                         "DESIGN.md §9) under --continuous")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache for continuous batching: slots "
                          "share a page pool with per-slot page tables "
@@ -81,7 +87,8 @@ def main() -> None:
     spec = SpecConfig(k=args.k, w=args.w, strategy=args.strategy,
                       max_new_tokens=args.max_new, backend=args.backend)
     eng = ServingEngine(params, cfg, spec, max_batch=args.n_prompts,
-                        max_new_cap=args.max_new, paged=args.paged,
+                        max_new_cap=args.max_new, adaptive=args.adaptive,
+                        paged=args.paged,
                         num_pages=args.num_pages or None,
                         page_size=args.page_size)
     for prompt, _ in make_prompts(args.task, args.n_prompts):
@@ -97,6 +104,8 @@ def main() -> None:
               f"output={r.output[:60]!r}")
     if args.paged:
         print(f"pool: {eng.pool_stats()}")
+    if args.adaptive and args.continuous:
+        print(f"bandit: {eng.adaptive_stats()}")
 
 
 if __name__ == "__main__":

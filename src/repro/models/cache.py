@@ -131,6 +131,20 @@ def insert_slot(state: Dict, row_state: Dict, slot) -> Dict:
             "groups": groups}
 
 
+def zero_slot_stats(stats: Dict, slot) -> Dict:
+    """Zero batch slot ``slot``'s row in every per-slot stats array.
+
+    Works for any trailing shape — scalar counters (B,), histograms (B, n)
+    and the adaptive controller's per-arm state (B, A) alike — so slot
+    admission/release resets the bandit with the same sweep that resets the
+    call/token counters: a reused slot can never inherit the previous
+    request's arm rewards (DESIGN.md §9 donation/reset rules).  ``slot`` may
+    be traced (used inside the jitted admit/release paths).
+    """
+    return {k: v.at[slot].set(jnp.zeros((), v.dtype))
+            for k, v in stats.items()}
+
+
 def reset_slot(cfg: ModelConfig, state: Dict, slot) -> Dict:
     """Reset batch slot ``slot`` to the freshly-initialised empty state.
 

@@ -15,6 +15,14 @@ Two serving modes share the engine:
     and queued prompts are prefilled into the freed slots (admit_slot), so
     slots never idle while there is work queued.
 
+``adaptive=True`` works in BOTH modes, with different machinery: serve_all
+picks one (k, w) arm per whole batch with the host-side UCB controller
+(core/controller.py AdaptiveKW); continuous batching instead bakes the arm
+table into the spec_step as shape-stable masking (SpecConfig.arms,
+DESIGN.md §9) — every slot picks its own arm every step INSIDE the jit, so
+one compilation serves every arm and requests adapt individually while in
+flight.
+
 Continuous batching can further run over the PAGED KV layout
 (``paged=True``, DESIGN.md §8): slots share a page pool with per-slot page
 tables and admission is gated on pages-available (worst-case reservation,
@@ -51,14 +59,18 @@ class ServingEngine:
                  tables: Optional[NGramTables] = None,
                  max_batch: int = 8,
                  adaptive: bool = False,
+                 arms: Optional[Tuple[Tuple[int, int], ...]] = None,
                  buckets: Optional[Tuple[int, ...]] = None,
                  max_new_cap: int = 64,
                  bucket_align: Optional[int] = None,
                  paged: bool = False,
                  num_pages: Optional[int] = None,
                  page_size: int = 0):
-        """``adaptive``: pick (k, w) per batch with the UCB controller
-        (core/controller.py, beyond-paper) instead of a static setting.
+        """``adaptive``: pick (k, w) online with the UCB controller
+        (core/controller.py, beyond-paper) instead of a static setting —
+        per whole batch under serve_all, per slot per step (shape-stable
+        arm masking inside the jitted spec_step) under continuous batching.
+        ``arms`` overrides the controller's arm table (DEFAULT_ARMS).
         ``buckets``/``max_new_cap`` bound the continuous-batching DecodeState
         (buffer length = largest bucket + max_new_cap + w + 2).
         ``bucket_align``: bucket-boundary multiple; None = lane-aligned when
@@ -91,9 +103,13 @@ class ServingEngine:
             buckets=buckets if buckets is not None else DEFAULT_BUCKETS,
             align=bucket_align)
         self.controller = None
+        self._arms: Optional[Tuple[Tuple[int, int], ...]] = None
         if adaptive:
-            from ..core.controller import AdaptiveKW
-            self.controller = AdaptiveKW(cfg)
+            from ..core.controller import DEFAULT_ARMS, AdaptiveKW
+            self._arms = tuple(tuple(a) for a in (arms or DEFAULT_ARMS))
+            self.controller = AdaptiveKW(cfg, arms=self._arms)
+        elif arms is not None:
+            raise ValueError("arms= requires adaptive=True")
         self.paged = paged
         if paged and not Cache.paged_supported(cfg):
             raise ValueError(
@@ -102,11 +118,16 @@ class ServingEngine:
         self._paged_cfg = (PagedConfig(num_pages or 0, page_size)
                            if paged else None)
         if (self.spec.strategy != "greedy" or adaptive) and tables is None:
-            tables = self.build_tables(k_max=max(self.spec.k, 25),
-                                       w_max=max(self.spec.w, 16))
+            arm_k = max((a[0] for a in self._arms or ()), default=0)
+            arm_w = max((a[1] for a in self._arms or ()), default=0)
+            tables = self.build_tables(k_max=max(self.spec.k, 25, arm_k),
+                                       w_max=max(self.spec.w, 16, arm_w))
         self.tables = tables
         self._gen_cache: Dict = {}
-        # continuous-batching state, built lazily on first step()
+        # continuous-batching state, built lazily on first step();
+        # _cont_spec is the spec the continuous path actually runs —
+        # adaptive mode rebuilds it around the arm table in _init_continuous
+        self._cont_spec: SpecConfig = self.spec
         self._cont_state: Optional[DecodeState] = None
         self._slots: Optional[SlotMap] = None
 
@@ -198,18 +219,21 @@ class ServingEngine:
     # continuous batching (slot-level admission / retirement)
     # ------------------------------------------------------------------
     def _init_continuous(self) -> None:
+        # adaptive continuous: bake the controller's arm table into the
+        # spec as shape-stable masking (DESIGN.md §9) — the step's shapes
+        # are the arm-table maxima, every slot picks its arm per step
+        # inside the ONE jitted spec_step, and the per-slot bandit state
+        # rides in DecodeState.stats (zeroed on slot admission/release)
+        spec = self.spec
         if self.controller is not None:
-            raise NotImplementedError(
-                "adaptive (k, w) over continuous batching is not implemented"
-                ": the UCB controller (core/controller.py) picks one static "
-                "(k, w) arm per whole batch, but the continuous path reuses "
-                "ONE jitted spec_step whose shapes bake in (k, w) — per-step "
-                "arm switching would recompile every change.  This is the "
-                "ROADMAP item 'In-flight adaptive (k, w) over spec_step'; "
-                "the planned fix is per-step arm selection that MASKS down "
-                "from a max (k, w) so shapes stay stable.  Until then use "
-                "adaptive=True with serve_all(), or continuous batching "
-                "with a static SpecConfig.")
+            k_max = max(a[0] for a in self._arms)
+            w_max = max(a[1] for a in self._arms)
+            strategy = ("mixed" if spec.strategy == "greedy"
+                        else spec.strategy)
+            spec = dataclasses.replace(
+                spec, k=k_max, w=max(w_max, 1), strategy=strategy,
+                arms=self._arms).validate_arms()
+        self._cont_spec = spec
         # size the DecodeState to the queued workload, not the 512-token
         # worst case; the scheduler itself is left untouched (a later
         # serve_all on this engine sees the full bucket ladder).  Prompts
@@ -223,14 +247,17 @@ class ServingEngine:
         if not self.paged and not self._explicit_buckets:
             prompt_cap = self.scheduler.max_queued_bucket() or prompt_cap
         self._cont_prompt_cap = prompt_cap
-        buf_size = prompt_cap + self.max_new_cap + self.spec.w + 2
+        buf_size = prompt_cap + self.max_new_cap + self._cont_spec.w + 2
         if self._kernel_aligned:
             buf_size = dispatch.align_cache_len(buf_size,
                                                 self.cfg.kernel_block_s)
-        self._cont_state = empty_decode_state(self.cfg, self.spec,
+        self._cont_state = empty_decode_state(self.cfg, self._cont_spec,
                                               self.max_batch, buf_size,
                                               paged=self._paged_cfg)
         self._slots = SlotMap(self.max_batch)
+        # host-side aggregate of retired requests' arm pulls (adaptive)
+        self._arm_pulls_total = (np.zeros(len(self._arms), np.int64)
+                                 if self._arms else None)
         # page accounting (paged mode): admission reserves each request's
         # worst-case page count up front so the in-step on-the-fly growth
         # (spec_engine) can never exhaust the pool mid-flight; physical
@@ -259,6 +286,8 @@ class ServingEngine:
         buf = np.asarray(state.buf)
         calls_np = np.asarray(state.stats["calls"])
         tokens_np = np.asarray(state.stats["tokens"])
+        arm_pulls_np = (np.asarray(state.stats["arm_pulls"])
+                        if self._arms else None)
         retired: List[Request] = []
         for slot, req in self._slots.occupied():
             if not done[slot]:
@@ -276,6 +305,13 @@ class ServingEngine:
                 # generate time — a different quantity)
                 "latency_s": time.perf_counter() - req.stats["admit_t"],
             }
+            if arm_pulls_np is not None:
+                # the slot's bandit history, read BEFORE release zeroes it
+                req.stats["arm_pulls"] = {
+                    self._arms[a]: int(arm_pulls_np[slot, a])
+                    for a in range(len(self._arms))
+                    if arm_pulls_np[slot, a]}
+                self._arm_pulls_total += arm_pulls_np[slot].astype(np.int64)
             state = release_slot(state, jnp.int32(slot))
             self._slots.release(slot)
             if self.paged:
@@ -287,8 +323,10 @@ class ServingEngine:
     def _slot_pages(self, prompt_len: int, mnt: int) -> int:
         """Worst-case pool pages one request can ever occupy: the cache
         holds at most prompt_len + mnt + w positions (cur_len peaks at
-        prompt_len + mnt - 1 and spec growth covers cur_len + w + 1)."""
-        return int(Cache.pages_for_len(prompt_len + mnt + self.spec.w,
+        prompt_len + mnt - 1 and spec growth covers cur_len + w + 1; under
+        adaptive arms w is the arm-table maximum — in-step growth is sized
+        for the worst arm whichever arm the slot picks)."""
+        return int(Cache.pages_for_len(prompt_len + mnt + self._cont_spec.w,
                                        self._page_size))
 
     def _reject(self, req: Request, reason: str) -> Request:
@@ -382,7 +420,8 @@ class ServingEngine:
         # retired next step; the one no-op spec_step it gets is rarer than
         # paying a device->host sync on every step to detect it).
         if len(self._slots):
-            self._cont_state = spec_step(self.params, self.cfg, self.spec,
+            self._cont_state = spec_step(self.params, self.cfg,
+                                         self._cont_spec,
                                          self._cont_state, self.tables)
             if self.paged:
                 in_use = self._pool_pages - int(
@@ -391,14 +430,17 @@ class ServingEngine:
         return retired
 
     def reset_pool_counters(self) -> None:
-        """Zero the cumulative pool counters (peak pages, deferral rounds,
-        rejections) without touching the pool itself — benchmarks call this
-        after their warmup phase so the measured window starts clean."""
+        """Zero the cumulative pool/bandit counters (peak pages, deferral
+        rounds, rejections, retired arm pulls) without touching the pool or
+        the in-flight bandit state — benchmarks call this after their
+        warmup phase so the measured window starts clean."""
         if self._cont_state is None:
             return
         if self.paged:
             self._pool_peak = 0
             self._deferrals = 0
+        if self._arm_pulls_total is not None:
+            self._arm_pulls_total[:] = 0
         self._rejected = 0
 
     def pool_stats(self) -> Dict:
@@ -416,6 +458,17 @@ class ServingEngine:
                 "peak_pages": self._pool_peak,
                 "deferrals": self._deferrals,
                 "rejected": self._rejected}
+
+    def adaptive_stats(self) -> Dict:
+        """Continuous-mode bandit telemetry: the arm table, cumulative
+        pulls per arm over all RETIRED requests, and each in-flight slot's
+        current pull counts (adaptive continuous mode only)."""
+        if self._arms is None or self._cont_state is None:
+            return {}
+        in_flight = np.asarray(self._cont_state.stats["arm_pulls"])
+        return {"arms": [list(a) for a in self._arms],
+                "pulls_retired": self._arm_pulls_total.tolist(),
+                "pulls_in_flight": in_flight.sum(axis=0).tolist()}
 
     def serve_continuous(self) -> List[Request]:
         """Drain the queue with continuous batching; blocks until idle."""

@@ -225,23 +225,25 @@ def test_overlong_prompt_rejected_not_truncated(tiny_dense):
     assert reqs[short.request_id].stats["new_tokens"] == 8
 
 
-def test_adaptive_continuous_raises_named_roadmap_item(tiny_dense):
-    """adaptive=True over the continuous path must fail loudly, naming the
-    ROADMAP item and the shape-stable masking workaround (previously only
-    reachable, never asserted)."""
+def test_adaptive_continuous_no_longer_raises(tiny_dense):
+    """Regression for the REMOVED NotImplementedError branch: adaptive=True
+    over the continuous path now serves (shape-stable arm masking,
+    DESIGN.md §9) — the old error and its documented masking-workaround
+    text are gone.  Full parity/bandit coverage lives in
+    tests/test_adaptive_continuous.py; this pins the error path's removal
+    where the error was originally asserted."""
     cfg, params = tiny_dense
     eng = ServingEngine(params, cfg,
                         SpecConfig(k=4, w=3, strategy="mixed",
                                    max_new_tokens=8),
                         tables=_tables(params, cfg), adaptive=True,
-                        max_batch=1, buckets=(16,), max_new_cap=8)
-    eng.submit("hello", max_new_tokens=8)
-    with pytest.raises(NotImplementedError) as exc:
-        eng.step()
-    msg = str(exc.value)
-    assert "In-flight adaptive" in msg          # the ROADMAP item, by name
-    assert "MASKS down" in msg                  # the planned workaround
-    assert "serve_all" in msg                   # the supported alternative
+                        arms=((1, 0), (4, 3)), max_batch=1, buckets=(16,),
+                        max_new_cap=8)
+    r = eng.submit("hello", max_new_tokens=8)
+    done = eng.serve_continuous()           # must not raise
+    assert [q.request_id for q in done] == [r.request_id]
+    assert done[0].stats["new_tokens"] == 8
+    assert "arm_pulls" in done[0].stats
 
 
 def test_continuous_throughput_stats(tiny_dense):

@@ -63,6 +63,92 @@ def test_context_drafts_exist_in_context(seed, q, w, k):
             assert tuple(np.asarray(d[0, i])) in continuations
 
 
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_masked_accept_equals_submatrix(seed, k, w):
+    """For ANY drafts/greedy and ANY mask (k_eff, w_eff): acceptance under
+    per-slot masking inside the (k, w) box is EXACTLY acceptance on the
+    (k_eff, w_eff) sub-problem — the algebraic core of the shape-stable
+    masking contract (DESIGN.md §9)."""
+    rng = np.random.default_rng(seed)
+    ke, we = int(rng.integers(1, k + 1)), int(rng.integers(0, w + 1))
+    drafts = jnp.asarray(rng.integers(0, 3, (1, k, w)), jnp.int32)
+    greedy = jnp.asarray(rng.integers(0, 3, (1, k, w + 1)), jnp.int32)
+    m = accept(drafts, greedy, k_eff=jnp.asarray([ke]),
+               w_eff=jnp.asarray([we]))
+    assert int(m.winner[0]) < ke
+    n = int(m.n_commit[0])
+    assert 1 <= n <= we + 1
+    if we == 0:     # pure greedy arm: single bonus token from row 0
+        assert int(m.winner[0]) == 0 and n == 1
+        assert int(m.tokens[0, 0]) == int(greedy[0, 0, 0])
+        return
+    d = accept(drafts[:, :ke, :we], greedy[:, :ke, :we + 1])
+    assert int(m.winner[0]) == int(d.winner[0])
+    assert n == int(d.n_commit[0])
+    np.testing.assert_array_equal(np.asarray(m.tokens[0, :n]),
+                                  np.asarray(d.tokens[0, :n]))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_adaptive_random_arms_respect_mask_and_budget(seed):
+    """Random arm tables + random eos/budget mixes: no step may commit a
+    slot more tokens than its chosen arm's w + 1, adaptation stays
+    lossless vs greedy (incl. eos truncation), and calls < tokens."""
+    from repro.core.ngram_tables import tables_from_counts
+    from repro.core.spec_engine import (SpecConfig, greedy_reference,
+                                        init_decode_state, spec_step)
+    from repro.models import model as M
+    from repro.models.config import ModelConfig
+    rng = np.random.default_rng(seed)
+    cfg = ModelConfig(name="t-adapt", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64,
+                      vocab_size=int(rng.integers(17, 41)),
+                      param_dtype=jnp.float32,
+                      compute_dtype=jnp.float32).validate()
+    params = M.init_params(jax.random.PRNGKey(seed % 1000), cfg)
+    counts = jnp.asarray(rng.random((cfg.vocab_size, cfg.vocab_size)),
+                         jnp.float32)
+    tables = tables_from_counts(counts, k_max=4, w_max=4)
+    k_max, w_max = 4, 4
+    n_arms = int(rng.integers(1, 4))
+    arms = tuple((int(rng.integers(1, k_max + 1)),
+                  int(rng.integers(0, w_max + 1))) for _ in range(n_arms))
+    ws = np.asarray([a[1] for a in arms])
+    B, P, N = 2, 6, 10
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+    ref = np.asarray(greedy_reference(params, cfg, prompt, N))
+    budget = np.asarray([int(rng.integers(3, N + 1)), N])
+    eos = np.asarray([-1, int(ref[1, P + rng.integers(0, 5)])])
+    spec = SpecConfig(k=k_max, w=w_max, strategy="mixed", max_new_tokens=N,
+                      arms=arms)
+    state = init_decode_state(params, cfg, spec, prompt,
+                              max_new_tokens=jnp.asarray(budget),
+                              eos_id=jnp.asarray(eos))
+    for _ in range(64):
+        if not bool(np.asarray(~state.done).any()):
+            break
+        prev_len = np.asarray(state.buf_len)
+        state = spec_step(params, cfg, spec, state, tables)
+        delta = np.asarray(state.buf_len) - prev_len
+        arm_last = np.asarray(state.stats["arm_last"])
+        # the per-step commit is bounded by the CHOSEN arm's depth + bonus
+        assert (delta <= ws[arm_last] + 1).all(), (delta, arms, arm_last)
+    else:
+        raise AssertionError("did not converge")
+    # lossless vs greedy under truncation, and speculation cost accounting
+    for b in range(B):
+        out = np.asarray(state.buf[b, P:int(state.buf_len[b])])
+        expect = list(ref[b, P:P + budget[b]])
+        if eos[b] >= 0 and eos[b] in expect:
+            expect = expect[:expect.index(eos[b]) + 1]
+        np.testing.assert_array_equal(out, np.asarray(expect, np.int32))
+    calls = np.asarray(state.stats["calls"])
+    tokens = np.asarray(state.stats["tokens"])
+    assert (calls < tokens).all()     # the free prefill token guarantees <
+
+
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=8, deadline=None)
 def test_spec_equals_greedy_random_models(seed):
