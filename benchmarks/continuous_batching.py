@@ -29,21 +29,38 @@ tokens/call plus the adaptive run's REGRET vs the best static arm (how
 much throughput exploration cost) and its pull distribution.  Writes
 ``BENCH_adaptive.json``.
 
+``--mesh DxM`` serves the SAME Poisson workload sharded over a debug mesh
+(DESIGN.md §10) and against the 1-device engine: asserts bit-identical
+outputs, reports tokens/s for both, and extracts the sharded spec_step's
+per-step collective bytes from its optimized HLO (the dry-run's
+``collective_bytes`` scraper — live serving now has the same collective
+profile visibility as the 512-device dry-run).  Writes
+``BENCH_sharded.json``.  On CPU the sharded run is a parity/plumbing
+signal, not a speedup: all placeholder devices share one physical CPU.
+
 Run:  PYTHONPATH=src python -m benchmarks.continuous_batching [--n 24]
       PYTHONPATH=src python -m benchmarks.continuous_batching --paged
       PYTHONPATH=src python -m benchmarks.continuous_batching --adaptive
+      PYTHONPATH=src python -m benchmarks.continuous_batching --mesh 2x2
 """
 from __future__ import annotations
+
+if __name__ == "__main__":
+    # --mesh needs placeholder devices BEFORE any jax import locks the
+    # count (appended to XLA_FLAGS; a caller-provided count is respected)
+    from repro.launch import hostdev
+    hostdev.ensure_for_mesh_argv()
 
 import argparse
 import json
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.spec_engine import SpecConfig
 from repro.data.datasets import make_prompts
+from repro.launch import hostdev
 from repro.serving import ServingEngine
 
 from .common import get_tables, get_trained, ensure_dirs
@@ -108,9 +125,11 @@ def run_static(eng, workload) -> Dict:
     return _summary(latency, toks, busy)
 
 
-def run_continuous(eng, workload) -> Dict:
+def run_continuous(eng, workload,
+                   out_ids: Optional[Dict[int, list]] = None) -> Dict:
     pending = list(workload)
     arrival: Dict[int, float] = {}
+    order: Dict[int, int] = {}          # request_id -> submission ordinal
     latency: Dict[int, float] = {}
     toks = 0
     calls = 0
@@ -120,7 +139,9 @@ def run_continuous(eng, workload) -> Dict:
         now = time.perf_counter() - t0
         while pending and pending[0][2] <= now:
             text, mnt, at = pending.pop(0)
-            arrival[eng.submit(text, max_new_tokens=mnt).request_id] = at
+            rid = eng.submit(text, max_new_tokens=mnt).request_id
+            arrival[rid] = at
+            order[rid] = len(order)
         if not (eng.scheduler.pending() or eng.in_flight()):
             time.sleep(min(0.001, max(pending[0][2] - now, 0.0)))
             continue
@@ -132,6 +153,12 @@ def run_continuous(eng, workload) -> Dict:
             latency[r.request_id] = done_t - arrival[r.request_id]
             toks += r.stats["new_tokens"]
             calls += r.stats.get("model_calls", 0)
+            if out_ids is not None:
+                # keyed by SUBMISSION ordinal (request_ids are process-
+                # global), so runs of the same workload compare directly
+                # (the sharded-vs-baseline parity check)
+                out_ids[order[r.request_id]] = \
+                    np.asarray(r.output_ids).tolist()
     return _summary(latency, toks, busy, calls)
 
 
@@ -322,6 +349,59 @@ def run_adaptive(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
     return res
 
 
+# ---------------------------------------------------------------------------
+# sharded continuous serving over a debug mesh (--mesh): BENCH_sharded.json
+# ---------------------------------------------------------------------------
+def run_mesh(mesh_shape, n: int = 24, rate_hz: float = 4.0,
+             max_batch: int = 4, seed: int = 0) -> Dict:
+    ensure_dirs()
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(mesh_shape)
+    cfg, params = get_trained()
+    tables = get_tables(cfg, params, k_max=16, w_max=10)
+    spec = SpecConfig(k=8, w=8, strategy="mixed",
+                      max_new_tokens=max(MAX_NEW_CHOICES))
+
+    def make_engine(mesh_arg):
+        return ServingEngine(params, cfg, spec, tables=tables,
+                             max_batch=max_batch, buckets=BUCKETS,
+                             max_new_cap=max(MAX_NEW_CHOICES), mesh=mesh_arg)
+
+    res = {"workload": {"n": n, "rate_hz": rate_hz, "seed": seed,
+                        "max_batch": max_batch, "buckets": list(BUCKETS),
+                        "spec": {"k": spec.k, "w": spec.w,
+                                 "strategy": spec.strategy}},
+           "mesh": "x".join(str(d) for d in mesh_shape)}
+    workload = make_workload(n, rate_hz, seed)
+    outputs = {}
+    for mode, mesh_arg in (("baseline_1dev", None), ("sharded", mesh)):
+        eng = make_engine(mesh_arg)
+        eng.submit("warmup", max_new_tokens=min(MAX_NEW_CHOICES))
+        eng.serve_continuous()
+        outs: Dict[int, list] = {}
+        summary = run_continuous(eng, workload, out_ids=outs)
+        outputs[mode] = outs
+        if mode == "sharded":
+            rep = eng.mesh_report()
+            assert rep["state_sharded"] > 0 and rep["params_sharded"] > 0, (
+                f"mesh {res['mesh']} sharded NOTHING — "
+                f"fallbacks: {rep['replication_fallbacks']}")
+            summary["mesh_report"] = rep
+            # per-step collective profile of the live sharded spec_step —
+            # the quantity the 512-device dry-run reports, now for serving
+            summary["collectives_per_step"] = collective_bytes(
+                eng.step_hlo())
+        res[mode] = summary
+    # the whole point: sharded serving is bit-identical, token for token
+    assert outputs["baseline_1dev"] == outputs["sharded"], (
+        "sharded serving diverged from the 1-device baseline")
+    res["parity"] = "bit-exact"
+    with open("BENCH_sharded.json", "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
 def run(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
         seed: int = 0) -> Dict:
     ensure_dirs()
@@ -375,7 +455,29 @@ def main() -> None:
                     help="benchmark per-slot adaptive (k, w) continuous "
                          "serving against every static arm of its table "
                          "and write BENCH_adaptive.json (regret report)")
+    ap.add_argument("--mesh", default="",
+                    help="serve the workload sharded over a DxM debug mesh "
+                         "(e.g. 2x2) vs the 1-device engine, assert bit "
+                         "parity, report per-step collective bytes, and "
+                         "write BENCH_sharded.json")
     args = ap.parse_args()
+    if args.mesh:
+        res = run_mesh(hostdev.parse_mesh_shape(args.mesh), args.n,
+                       args.rate, args.max_batch, args.seed)
+        print("mode,throughput_tok_s,tokens_per_call,p50_latency_s")
+        for mode in ("baseline_1dev", "sharded"):
+            r = res[mode]
+            print(f"{mode},{r['throughput_tok_s']},"
+                  f"{r.get('tokens_per_call', 0)},{r['p50_latency_s']}")
+        coll = res["sharded"]["collectives_per_step"]
+        rep = res["sharded"]["mesh_report"]
+        counts = {k: v for k, v in coll["counts"].items() if v}
+        print(f"parity: {res['parity']} | collective bytes/step "
+              f"{coll['total']} {counts} | params sharded "
+              f"{rep['params_sharded']}/{rep['params_leaves']} | "
+              f"state leaves sharded {rep['state_sharded']}")
+        print("wrote BENCH_sharded.json")
+        return
     if args.adaptive:
         res = run_adaptive(args.n, args.rate, args.max_batch, args.seed)
         print("mode,throughput_tok_s,tokens_per_call,p50_latency_s")

@@ -320,25 +320,12 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
         stats=stats)
 
 
-@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(2,))
-def admit_slot(params, cfg: ModelConfig, state: DecodeState,
-               slot: jnp.ndarray, prompt: jnp.ndarray,
-               max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray
-               ) -> DecodeState:
-    """Prefill ``prompt`` (P,) into slot ``slot`` of a shared DecodeState.
-
-    The freed slot's model cache is fully overwritten (cache.insert_slot), so
-    nothing can leak from the slot's previous occupant.  Compiles once per
-    prompt length P — the scheduler's length bucketing keeps that bounded.
-    ``slot``/``max_new_tokens``/``eos_id`` are traced, so heterogeneous
-    requests reuse the same executable.
-
-    Paged states prefill the row into a P-sized scratch linear cache, then
-    allocate ceil(P / page_size) pool pages for the slot and scatter the
-    prefix KV through its fresh page table (spec_step grows further pages on
-    the fly).  A defensive free first makes admission safe even if release
-    was skipped — free_slot_pages is idempotent.
-    """
+def _admit_body(params, cfg: ModelConfig, state: DecodeState,
+                slot: jnp.ndarray, prompt: jnp.ndarray,
+                max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray
+                ) -> DecodeState:
+    """Un-jitted body of ``admit_slot`` (re-jitted with explicit
+    NamedShardings by ``make_sharded_slot_fns`` for mesh serving)."""
     P = prompt.shape[0]
     L = state.buf_size
     paged = C.is_paged(state.model)
@@ -373,15 +360,31 @@ def admit_slot(params, cfg: ModelConfig, state: DecodeState,
         stats=stats)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
-    """Mark a retired row's slot as free.  Linear caches are overwritten on
-    the next admit (see cache.reset_slot for eager scrubbing); paged caches
-    return the slot's pages to the free stack NOW — reclaiming pool capacity
-    at retirement is the whole point of the paged layout.  The slot's stats
-    rows (including the adaptive bandit's per-arm state) are zeroed eagerly:
-    callers must read a retiring slot's stats BEFORE releasing it, and a
-    freed slot must not keep steering arm choices it can no longer use."""
+@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(2,))
+def admit_slot(params, cfg: ModelConfig, state: DecodeState,
+               slot: jnp.ndarray, prompt: jnp.ndarray,
+               max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray
+               ) -> DecodeState:
+    """Prefill ``prompt`` (P,) into slot ``slot`` of a shared DecodeState.
+
+    The freed slot's model cache is fully overwritten (cache.insert_slot), so
+    nothing can leak from the slot's previous occupant.  Compiles once per
+    prompt length P — the scheduler's length bucketing keeps that bounded.
+    ``slot``/``max_new_tokens``/``eos_id`` are traced, so heterogeneous
+    requests reuse the same executable.
+
+    Paged states prefill the row into a P-sized scratch linear cache, then
+    allocate ceil(P / page_size) pool pages for the slot and scatter the
+    prefix KV through its fresh page table (spec_step grows further pages on
+    the fly).  A defensive free first makes admission safe even if release
+    was skipped — free_slot_pages is idempotent.
+    """
+    return _admit_body(params, cfg, state, slot, prompt, max_new_tokens,
+                       eos_id)
+
+
+def _release_body(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
+    """Un-jitted body of ``release_slot`` (see ``make_sharded_slot_fns``)."""
     model = state.model
     if C.is_paged(model):
         model = C.free_slot_pages(model, slot)
@@ -391,6 +394,52 @@ def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
         stats=C.zero_slot_stats(state.stats, slot),
         active=state.active.at[slot].set(False),
         done=state.done.at[slot].set(True))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def release_slot(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
+    """Mark a retired row's slot as free.  Linear caches are overwritten on
+    the next admit (see cache.reset_slot for eager scrubbing); paged caches
+    return the slot's pages to the free stack NOW — reclaiming pool capacity
+    at retirement is the whole point of the paged layout.  The slot's stats
+    rows (including the adaptive bandit's per-arm state) are zeroed eagerly:
+    callers must read a retiring slot's stats BEFORE releasing it, and a
+    freed slot must not keep steering arm choices it can no longer use."""
+    return _release_body(state, slot)
+
+
+def make_sharded_slot_fns(cfg: ModelConfig, spec: SpecConfig, *,
+                          params_sh, state_sh, tables_sh, scalar_sh):
+    """jitted (spec_step, admit_slot, release_slot) with every input AND
+    output pinned to explicit NamedShardings — the mesh-serving versions of
+    the module-level jits (DESIGN.md §10).
+
+    Pinning out_shardings == in_shardings per state leaf is what keeps the
+    two serving guarantees alive under a mesh: (a) buffer DONATION stays
+    legal (XLA only aliases a donated buffer into an output with the same
+    sharding), so the sharded KV cache still updates in place; (b) the
+    state's placement is a fixed point of every function here, so the
+    serving loop's step N+1 sees bit-identical arg shardings to step N and
+    the step compiles exactly ONCE per shape — the same single-trace
+    contract the unsharded path has.  Scalars (slot ids, prompts, budgets)
+    are replicated.
+    """
+    step = jax.jit(
+        lambda params, state, tables: _step_body(params, cfg, spec, tables,
+                                                 state),
+        in_shardings=(params_sh, state_sh, tables_sh),
+        out_shardings=state_sh, donate_argnums=(1,))
+    admit = jax.jit(
+        lambda params, state, slot, prompt, mnt, eos: _admit_body(
+            params, cfg, state, slot, prompt, mnt, eos),
+        in_shardings=(params_sh, state_sh, scalar_sh, scalar_sh, scalar_sh,
+                      scalar_sh),
+        out_shardings=state_sh, donate_argnums=(1,))
+    release = jax.jit(
+        lambda state, slot: _release_body(state, slot),
+        in_shardings=(state_sh, scalar_sh),
+        out_shardings=state_sh, donate_argnums=(0,))
+    return step, admit, release
 
 
 # ---------------------------------------------------------------------------

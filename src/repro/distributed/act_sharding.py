@@ -17,7 +17,8 @@ model axis: 864 GiB/device temp (measured) vs ~56 GiB/device after
 """
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+from typing import Iterator, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -27,13 +28,45 @@ from .sharding import resolve_axis
 _MESH: Optional[Mesh] = None
 
 
+def _batch(mesh: Mesh, b: int):
+    """Activation batch dims replicate legitimately when odd (a 3-row
+    partial batch is routine, not a mis-sized mesh): resolve quietly,
+    never through the ShardingFallbackWarning path."""
+    return resolve_axis(mesh, "embed", b, warn=False)
+
+
 def install(mesh: Optional[Mesh]) -> None:
+    """Set the process-global activation sharder.  Prefer ``activated`` —
+    a bare install leaks the mesh across engines/tests, and an installed
+    mesh pins ``attn_verify`` off the Pallas kernel path
+    (models/attention.py:_use_verify_kernel)."""
     global _MESH
     _MESH = mesh
 
 
+def uninstall() -> None:
+    install(None)
+
+
 def installed() -> bool:
     return _MESH is not None
+
+
+@contextlib.contextmanager
+def activated(mesh: Optional[Mesh]) -> Iterator[None]:
+    """Scoped install: the sharder is active inside the block and the
+    PREVIOUS value is restored on exit (exception-safe), so one engine's
+    mesh can never leak into another engine's traces.  ``constrain`` only
+    matters at trace time, so owners (ServingEngine, the dry-run) wrap
+    every call that may trace in this context instead of installing
+    globally.  ``activated(None)`` is a no-op scope."""
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
 
 
 def constrain(x, kind: str):
@@ -42,11 +75,13 @@ def constrain(x, kind: str):
     mesh = _MESH
     if kind == "residual" and x.ndim == 3:
         B, T, _ = x.shape
-        spec = P(resolve_axis(mesh, "embed", B),
-                 resolve_axis(mesh, "heads", T), None)
+        # sequence parallelism is opportunistic (decode-time T = w+1 is
+        # tiny and legitimately replicated): no fallback warning here
+        spec = P(_batch(mesh, B),
+                 resolve_axis(mesh, "heads", T, warn=False), None)
     elif kind == "logits" and x.ndim == 3:
         B, T, V = x.shape
-        spec = P(resolve_axis(mesh, "embed", B), None,
+        spec = P(_batch(mesh, B), None,
                  resolve_axis(mesh, "vocab", V))
     elif kind == "ctx_logits" and x.ndim == 6:
         # decode/verify context logits (B, K, n_kv, G, w1, S): keep them in
@@ -56,20 +91,20 @@ def constrain(x, kind: str):
         # softmax/value contraction pay only small partial-reduce
         # collectives (flash-decode sequence parallelism, §Perf it-7).
         B, K, n_kv, G, w1, S = x.shape
-        n_ax = resolve_axis(mesh, "kv", n_kv)
+        n_ax = resolve_axis(mesh, "kv", n_kv, warn=False)  # seq fallback next
         s_ax = None
         if n_ax is None and S % mesh.shape.get("model", 1) == 0:
             s_ax = "model"
-        spec = P(resolve_axis(mesh, "embed", B), None, n_ax, None, None,
+        spec = P(_batch(mesh, B), None, n_ax, None, None,
                  s_ax)
     elif kind == "ctx_out" and x.ndim == 6:
         # (B, K, w1, n_kv, G, hd) value-contraction output: batch-only so
         # the s-sharded contraction resolves as partial-sum + small
         # all-reduce instead of all-gathering the V cache.
-        spec = P(resolve_axis(mesh, "embed", x.shape[0]), None, None, None,
+        spec = P(_batch(mesh, x.shape[0]), None, None, None,
                  None, None)
     elif kind == "hidden_ffn" and x.ndim >= 2:
-        spec = P(*([resolve_axis(mesh, "embed", x.shape[0])]
+        spec = P(*([_batch(mesh, x.shape[0])]
                    + [None] * (x.ndim - 2)
                    + [resolve_axis(mesh, "ffn", x.shape[-1])]))
     else:

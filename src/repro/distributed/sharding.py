@@ -17,7 +17,9 @@ not.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import contextlib
+import warnings
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
@@ -35,20 +37,86 @@ _LOGICAL = {
 }
 
 
+class ShardingFallbackWarning(UserWarning):
+    """A logical axis degraded to replication because no mesh-axis chain
+    divides the dim.  Correct but memory-costly: a mis-sized mesh serves
+    the full replicated tensor on every device."""
+
+
+# once-per-(logical, dim, mesh-shape) so traces don't spam; tests reset it
+_FALLBACK_WARNED: set = set()
+# scoped recorders (recording_fallbacks): every dead-end fallback is added
+# to each active recorder, independent of the once-only warning dedup — so
+# a caller (ServingEngine.mesh_report) can attribute fallbacks to ITS OWN
+# spec resolution instead of reading the process-global history
+_RECORDERS: List[Set[Tuple[str, int]]] = []
+
+
 def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
     return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64))
 
 
-def resolve_axis(mesh: Mesh, logical: Optional[str], dim: int):
-    """Pick the first fallback whose size divides ``dim`` (else None)."""
+def reset_fallback_warnings() -> None:
+    _FALLBACK_WARNED.clear()
+
+
+def fallback_report() -> List[Tuple[str, int]]:
+    """(logical, dim) pairs that degraded to replication so far in this
+    PROCESS (all meshes, all callers), sorted.  For a single engine's view
+    use ``recording_fallbacks`` around its own spec resolution."""
+    return sorted({(lg, d) for lg, d, _ in _FALLBACK_WARNED})
+
+
+@contextlib.contextmanager
+def recording_fallbacks():
+    """Collect every replication dead-end hit while the context is active
+    — repeats included (the once-only warning dedup does not apply), so
+    re-resolving a spec tree always yields its full fallback set."""
+    rec: Set[Tuple[str, int]] = set()
+    _RECORDERS.append(rec)
+    try:
+        yield rec
+    finally:
+        # strictly LIFO — pop by position, not remove() (set equality
+        # would match a different recorder with equal contents)
+        assert _RECORDERS[-1] is rec
+        _RECORDERS.pop()
+
+
+def resolve_axis(mesh: Mesh, logical: Optional[str], dim: int, *,
+                 warn: bool = True):
+    """Pick the first fallback whose size divides ``dim`` (else None).
+
+    Replication-on-non-divisible is by design (a sharding that fails to
+    lower is a bug, a replicated tensor is not), but it must not be
+    SILENT: when every candidate chain fails, a once-per-(axis, dim, mesh)
+    ``ShardingFallbackWarning`` fires.  Callers that probe one rule only
+    to fall back to ANOTHER sharding (e.g. the kv->sequence cache chain in
+    ``state_pspec``) pass ``warn=False`` — there the tensor still ends up
+    sharded and the warning would be a false alarm.
+    """
     if logical is None:
         return None
+    tried = False
     for axes in _LOGICAL[logical]:
         axes = tuple(a for a in axes if a in mesh.shape)
         if not axes:
             continue
+        tried = True
         if dim % _axis_size(mesh, axes) == 0:
             return axes if len(axes) > 1 else axes[0]
+    if tried and warn and dim > 1:     # replicating a size-1 dim is free
+        for rec in _RECORDERS:
+            rec.add((logical, dim))
+        key = (logical, dim, tuple(sorted((str(k), int(v))
+                                          for k, v in mesh.shape.items())))
+        if key not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(key)
+            warnings.warn(
+                f"logical axis {logical!r} (dim {dim}) divides no mesh axis "
+                f"chain of {dict(mesh.shape)} — replicating (full per-device "
+                f"memory).  Resize the mesh or the dim to shard it.",
+                ShardingFallbackWarning, stacklevel=2)
     return None
 
 
@@ -117,7 +185,18 @@ _MOE_3D_RULES = {
 
 
 def _path_names(path) -> Tuple[str, ...]:
-    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    """Key names along a tree path: dict keys, dataclass attribute names
+    (registered dataclasses like DecodeState flatten to GetAttrKey) and
+    sequence indices alike."""
+    out = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(p, attr):
+                out.append(str(getattr(p, attr)))
+                break
+        else:
+            out.append(str(p))
+    return tuple(out)
 
 
 def param_pspec(mesh: Mesh, path, leaf) -> P:
@@ -130,11 +209,15 @@ def param_pspec(mesh: Mesh, path, leaf) -> P:
     core_shape = shape[1:] if stacked else shape
     if name in _MOE_3D_RULES and len(core_shape) == 3:
         for rule in _MOE_3D_RULES[name]:
-            spec = [resolve_axis(mesh, lg, d)
+            # probe silently (the next rule is the fallback)...
+            spec = [resolve_axis(mesh, lg, d, warn=False)
                     for lg, d in zip(rule, core_shape)]
             if spec[0] is not None or rule[0] is None:
                 break
-        # fall through to the last rule if expert dim never divided
+        # falls through to the last rule if the expert dim never divided.
+        # ...then re-resolve the CHOSEN rule loudly: its dead ends (any
+        # dim, not just the leading one) are genuine replication
+        spec = [resolve_axis(mesh, lg, d) for lg, d in zip(rule, core_shape)]
     elif name in _PARAM_RULES and len(_PARAM_RULES[name]) == len(core_shape):
         rule = _PARAM_RULES[name]
         spec = [resolve_axis(mesh, lg, d) for lg, d in zip(rule, core_shape)]
@@ -155,7 +238,10 @@ def params_shardings(mesh: Mesh, params_shapes) -> Any:
 # decode-state rules
 # ----------------------------------------------------------------------------
 def _batch_axes(mesh: Mesh, b: int):
-    return resolve_axis(mesh, "embed", b)   # ("pod","data") fallback chain
+    # batch/slot dims are transient and cheap: an odd batch (a 3-prompt
+    # partial batch, an odd slot count) replicating is routine, not the
+    # mis-sized-mesh memory hazard the fallback warning flags
+    return resolve_axis(mesh, "embed", b, warn=False)
 
 
 def state_pspec(mesh: Mesh, path, leaf) -> P:
@@ -168,7 +254,7 @@ def state_pspec(mesh: Mesh, path, leaf) -> P:
     batch = _batch_axes(mesh, B)
     if name in ("k", "v"):                      # (R, B, S, KV, hd)
         _, _, S, KV, hd = shape
-        kv_ax = resolve_axis(mesh, "kv", KV)
+        kv_ax = resolve_axis(mesh, "kv", KV, warn=False)   # seq fallback below
         seq_ax = None
         if kv_ax is None and S % mesh.shape.get("model", 1) == 0:
             # kv heads don't divide the model axis (kv=8/2/1 GQA): shard the
@@ -186,12 +272,12 @@ def state_pspec(mesh: Mesh, path, leaf) -> P:
     if name == "ssm":                           # (R, B, di, ds)
         return P(None, batch, resolve_axis(mesh, "ffn", shape[2]), None)
     if name == "C":                             # (R, B, nh, dh, dh)
-        nh_ax = resolve_axis(mesh, "heads", shape[2])
+        nh_ax = resolve_axis(mesh, "heads", shape[2], warn=False)
         dh_ax = resolve_axis(mesh, "heads", shape[3]) if nh_ax is None \
             else None
         return P(None, batch, nh_ax, dh_ax, None)
     if name in ("n", "h", "c", "m"):            # (R,B,nh[,dh])
-        nh_ax = resolve_axis(mesh, "heads", shape[2])
+        nh_ax = resolve_axis(mesh, "heads", shape[2], warn=False)
         rest = [None] * (len(shape) - 3)
         if nh_ax is None and len(shape) > 3:
             rest[0] = resolve_axis(mesh, "heads", shape[3])
@@ -203,6 +289,91 @@ def state_shardings(mesh: Mesh, state_shapes) -> Any:
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, state_pspec(mesh, path, leaf)),
         state_shapes)
+
+
+# ----------------------------------------------------------------------------
+# full DecodeState rules (live sharded serving, DESIGN.md §10)
+# ----------------------------------------------------------------------------
+# per-slot row leaves of core.spec_engine.DecodeState: dim 0 is the slot
+# ("batch") axis; everything trailing is replicated
+_STATE_ROW_FIELDS = ("buf", "buf_len", "prompt_len", "budget", "eos_id",
+                     "done", "active")
+
+
+def _page_axes(mesh: Mesh, num_pages: int, kv_sharded: bool):
+    """The paged pool's page axis shards like the linear cache's
+    (batch, sequence) pair it replaces: capacity-parallel over
+    ("pod","data") when divisible, extended over "model" too when the kv
+    heads could not take the model axis (the GQA kv=8/2/1 case — exactly
+    the linear layout's sequence-over-"model" fallback)."""
+    axes: Tuple[str, ...] = ()
+    for chain in (("pod", "data"), ("data",)):
+        c = tuple(a for a in chain if a in mesh.shape)
+        if c and num_pages % _axis_size(mesh, c) == 0:
+            axes = c
+            break
+    if not kv_sharded and "model" in mesh.shape:
+        cand = axes + ("model",)
+        if num_pages % _axis_size(mesh, cand) == 0:
+            axes = cand
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def decode_state_pspec(mesh: Mesh, path, leaf, *, paged: bool = False) -> P:
+    """PartitionSpec for ONE leaf of a full ``DecodeState`` pytree.
+
+    Extends ``state_pspec`` (which covers the model-cache leaves) with the
+    serving-level leaves: the token buffer / per-slot scalars / stats rows
+    shard their slot axis over ("pod","data"); the paged pool's page axis
+    shards like the sequence axis (ROADMAP); page tables are slot-sharded
+    and the free stack is replicated (it is mutated identically on every
+    device — a tiny int32 vector, and replication keeps alloc/free/grow
+    collective-free).
+    """
+    names = _path_names(path)
+    top, name = names[0], names[-1]
+    shape = tuple(leaf.shape)
+    if top in _STATE_ROW_FIELDS or top == "stats":
+        return P(_batch_axes(mesh, shape[0]), *([None] * (len(shape) - 1)))
+    # below here: the model-cache subtree
+    if name == "page_table":
+        return P(_batch_axes(mesh, shape[0]), None)
+    if name == "n_pages":
+        return P(_batch_axes(mesh, shape[0]))
+    if name in ("free_list", "free_top"):
+        return P(*([None] * len(shape)))
+    if paged and name in ("k", "v"):            # pool (R, NP, ps, KV, hd)
+        _, NP, _, KV, _ = shape
+        kv_ax = resolve_axis(mesh, "kv", KV, warn=False)
+        page_ax = _page_axes(mesh, NP, kv_sharded=kv_ax is not None)
+        if kv_ax is None and page_ax is None:
+            resolve_axis(mesh, "kv", KV)        # end of chain: warn once
+        return P(None, page_ax, None, kv_ax, None)
+    return state_pspec(mesh, path, leaf)
+
+
+def decode_state_shardings(mesh: Mesh, state) -> Any:
+    """NamedSharding pytree for a ``DecodeState`` (or shape structs of one).
+
+    Detects the paged layout from the state itself ("page_table" under
+    ``model``), so callers pass the state they actually built.
+    """
+    paged = isinstance(getattr(state, "model", None), dict) \
+        and "page_table" in state.model
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, decode_state_pspec(mesh, path, leaf, paged=paged)),
+        state)
+
+
+def spec_summary(shardings) -> Dict[str, str]:
+    """{leaf path: partition spec} for a NamedSharding pytree — the
+    human-readable half of ``ServingEngine.mesh_report()``."""
+    flat = jax.tree_util.tree_flatten_with_path(shardings)[0]
+    return {"/".join(_path_names(path)): str(tuple(sh.spec))
+            for path, sh in flat}
 
 
 def batch_sharding(mesh: Mesh, shape: Tuple[int, ...],

@@ -151,9 +151,16 @@ def ngram_sweep(buf: jnp.ndarray, query: jnp.ndarray, cur_len: jnp.ndarray,
     Both backends produce bit-identical integers (property the scoring
     stage in core/drafters.py relies on), so drafts cannot depend on the
     backend.
+
+    Mesh seam (DESIGN.md §10): like ``attn_verify``, an installed
+    activation sharder pins this to the XLA path — the Pallas sweep is a
+    single-device ``pallas_call`` that the SPMD partitioner cannot split,
+    so dispatching it over a data-sharded ``buf`` inside the sharded
+    spec_step would fail to lower (or gather the buffer every step).
     """
     bl = block_l if block_l else ops.DEFAULT_BLOCK_L
-    if use_pallas(backend):
+    from ..distributed import act_sharding
+    if use_pallas(backend) and not act_sharding.installed():
         return ops.ngram_match_op(buf, query, cur_len, w=w, block_l=bl,
                                   interpret=default_interpret())
     B, L = buf.shape

@@ -1,9 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
-#   This placeholder-device override exists ONLY here (dry-run); tests and
-#   benches see the single real CPU device.
-
 """Multi-pod dry-run (deliverable e).
 
 For every (architecture x input-shape) pair, lower + compile the production
@@ -18,6 +12,17 @@ Usage:
   python -m repro.launch.dryrun --all --multi-pod
   python -m repro.launch.dryrun --arch mixtral-8x7b --shape decode_32k --spec
 """
+import os
+
+if __name__ == "__main__":
+    # 512-placeholder-device override, entry-point ONLY: it must precede
+    # the jax import below (the device count locks on first init), and
+    # IMPORTING this module (test collection, benchmarks borrowing
+    # collective_bytes) must never mutate jax device state.  The append-
+    # don't-clobber / respect-caller-count policy lives in hostdev.
+    from repro.launch.hostdev import ensure_host_devices
+    ensure_host_devices(512)
+
 import argparse
 import json
 import re
@@ -94,13 +99,9 @@ def _compile_case(case, mesh):
     jfn = jax.jit(case.fn, in_shardings=case.in_shardings,
                   out_shardings=case.out_shardings,
                   donate_argnums=case.donate)
-    try:
-        act_sharding.install(mesh)
-        with mesh:
-            lowered = jfn.lower(*case.args)
-            compiled = lowered.compile()
-    finally:
-        act_sharding.install(None)
+    with act_sharding.activated(mesh), mesh:
+        lowered = jfn.lower(*case.args)
+        compiled = lowered.compile()
     return compiled
 
 

@@ -1,0 +1,71 @@
+"""Host-platform placeholder-device override, applied BEFORE any jax import.
+
+jax locks the device count on first init, so entry points that want a
+multi-device CPU debug mesh (``--mesh`` in launch/serve.py and
+benchmarks/continuous_batching.py, the sharded pytest lane, the dry-run)
+must extend ``XLA_FLAGS`` before importing jax.  This module is
+deliberately jax-free so it can run first.
+
+The rules every caller of ``ensure_host_devices`` gets:
+  - never clobber caller-provided ``XLA_FLAGS`` — APPEND the override;
+  - never override a device count the caller already chose;
+  - never touch the environment once jax is imported (too late to matter,
+    and mutating it then would only mislead subprocesses).
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+from typing import Optional, Tuple
+
+_COUNT_FLAG = "xla_force_host_platform_device_count"
+
+
+def parse_mesh_shape(s: str) -> Tuple[int, ...]:
+    """"2x2" -> (2, 2); "2x2x2" -> (2, 2, 2).  2 axes = (data, model),
+    3 = (pod, data, model) — launch/mesh.py names them."""
+    try:
+        dims = tuple(int(x) for x in s.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh wants DxM (e.g. 2x2), got {s!r}")
+    if len(dims) not in (2, 3) or any(d <= 0 for d in dims):
+        raise ValueError(f"--mesh wants 2 or 3 positive dims, got {s!r}")
+    return dims
+
+
+def mesh_arg(argv=None) -> Optional[str]:
+    """Early peek at ``--mesh`` (before argparse — which needs the module
+    imported — and before the jax import locks the device count)."""
+    argv = sys.argv if argv is None else argv
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def ensure_for_mesh_argv(argv=None) -> Optional[str]:
+    """The whole --mesh bootstrap in one call: peek argv, parse the shape,
+    provision placeholder devices for it.  Returns the raw --mesh string
+    (None when absent).  Entry points call this under their
+    ``if __name__ == "__main__"`` guard BEFORE importing jax."""
+    m = mesh_arg(argv)
+    if m:
+        ensure_host_devices(math.prod(parse_mesh_shape(m)))
+    return m
+
+
+def ensure_host_devices(n: int) -> bool:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS if
+    no count is set yet and jax is not imported.  Returns whether the
+    environment was changed."""
+    if "jax" in sys.modules:
+        return False     # device count already locked; mesh build will
+                         # raise a clear error if there are too few devices
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _COUNT_FLAG in flags:
+        return False
+    os.environ["XLA_FLAGS"] = f"{flags} --{_COUNT_FLAG}={n}".strip()
+    return True

@@ -6,6 +6,8 @@ and benches see the single real device).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 
@@ -16,6 +18,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
-    """Small mesh for CPU sharding tests (requires host-device override)."""
+def make_debug_mesh(shape=(2, 2), axes=None):
+    """Small mesh for CPU sharded serving/tests (requires the host-device
+    override — launch/hostdev.py — or enough real devices).  2 dims name
+    ("data", "model"), 3 name ("pod", "data", "model"), matching the
+    production mesh's axis vocabulary so every sharding rule applies."""
+    if axes is None:
+        axes = ("pod", "data", "model") if len(shape) == 3 \
+            else ("data", "model")
+    if jax.device_count() < math.prod(shape):
+        raise RuntimeError(
+            f"debug mesh {shape} needs {math.prod(shape)} "
+            f"devices but jax sees {jax.device_count()} — launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N (the "
+            f"--mesh entry points set it for you when it is absent)")
     return jax.make_mesh(shape, axes)

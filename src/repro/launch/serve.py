@@ -8,6 +8,13 @@ from __future__ import annotations
 
 import argparse
 
+from repro.launch import hostdev
+
+if __name__ == "__main__":
+    # --mesh needs placeholder devices BEFORE the jax import below locks
+    # the count (appends to XLA_FLAGS; respects a caller-provided count)
+    hostdev.ensure_for_mesh_argv()
+
 import jax
 
 from repro.configs import ALL_ARCHS, get_smoke_config
@@ -52,6 +59,13 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=0,
                     help="positions per page for --paged (0 = the verify "
                          "kernel's cache block)")
+    ap.add_argument("--mesh", default="",
+                    help="serve SHARDED over a DxM debug mesh (e.g. 2x2 = "
+                         "data 2 x model 2; 3 dims add a leading pod axis). "
+                         "On CPU the launcher forces placeholder devices "
+                         "via XLA_FLAGS when none are configured; outputs "
+                         "stay bit-identical to unsharded serving "
+                         "(DESIGN.md §10)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "xla", "pallas"],
                     help="kernel-dispatch backend (kernels/dispatch.py): "
@@ -61,6 +75,10 @@ def main() -> None:
     args = ap.parse_args()
     if args.paged and not args.continuous:
         raise SystemExit("--paged applies to --continuous serving")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(hostdev.parse_mesh_shape(args.mesh))
 
     cfg = get_smoke_config(args.arch)
     if cfg.encoder_only:
@@ -90,7 +108,7 @@ def main() -> None:
                         max_new_cap=args.max_new, adaptive=args.adaptive,
                         paged=args.paged,
                         num_pages=args.num_pages or None,
-                        page_size=args.page_size)
+                        page_size=args.page_size, mesh=mesh)
     for prompt, _ in make_prompts(args.task, args.n_prompts):
         eng.submit(prompt, max_new_tokens=args.max_new)
     served = eng.serve_continuous() if args.continuous else eng.serve_all()
@@ -106,6 +124,12 @@ def main() -> None:
         print(f"pool: {eng.pool_stats()}")
     if args.adaptive and args.continuous:
         print(f"bandit: {eng.adaptive_stats()}")
+    if mesh is not None:
+        rep = eng.mesh_report()
+        print(f"mesh: {rep.get('mesh')} params sharded "
+              f"{rep.get('params_sharded')}/{rep.get('params_leaves')} "
+              f"state leaves sharded {rep.get('state_sharded', 'n/a')} "
+              f"fallbacks {rep.get('replication_fallbacks')}")
 
 
 if __name__ == "__main__":

@@ -29,9 +29,18 @@ tables and admission is gated on pages-available (worst-case reservation,
 deferral when the pool is exhausted) instead of slot count alone —
 bit-identical outputs, but one long-context request no longer forces every
 slot to a worst-case linear buffer.
+
+Both modes also serve SHARDED over a real ``jax.sharding.Mesh``
+(``mesh=...``, DESIGN.md §10): params/DecodeState get NamedShardings from
+``distributed/sharding``, the step/admit/release jits are rebuilt with
+those shardings pinned on inputs and outputs (donation + single-trace
+preserved), and the activation sharder is scoped to this engine's traces —
+never installed globally.  Outputs remain bit-identical to unsharded
+serving; ``mesh_report()`` shows what actually sharded.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -40,12 +49,16 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from ..core.ngram_tables import NGramTables, build_bigram, build_unigram
 from ..core.spec_engine import (DecodeState, PagedConfig, SpecConfig,
                                 admit_slot, empty_decode_state, generate,
-                                release_slot, spec_step)
+                                make_sharded_slot_fns, release_slot,
+                                spec_step)
 from ..data.tokenizer import ByteTokenizer
+from ..distributed import act_sharding
+from ..distributed import sharding as shd
 from ..kernels import dispatch
 from ..models import cache as Cache
 from ..models import model as M
@@ -65,7 +78,8 @@ class ServingEngine:
                  bucket_align: Optional[int] = None,
                  paged: bool = False,
                  num_pages: Optional[int] = None,
-                 page_size: int = 0):
+                 page_size: int = 0,
+                 mesh: Optional[Mesh] = None):
         """``adaptive``: pick (k, w) online with the UCB controller
         (core/controller.py, beyond-paper) instead of a static setting —
         per whole batch under serve_all, per slot per step (shape-stable
@@ -82,19 +96,49 @@ class ServingEngine:
         page-reservation-based, so one long-context request no longer
         forces every slot to a worst-case linear buffer.  ``page_size`` 0
         follows cfg.kernel_block_s (the Pallas verify kernel's cache
-        block).  Bit-identical outputs to the linear layout."""
+        block).  Bit-identical outputs to the linear layout.
+
+        ``mesh``: serve SHARDED over a ``jax.sharding.Mesh`` (DESIGN.md
+        §10): params are placed by ``distributed.sharding.params_shardings``,
+        the continuous DecodeState by ``decode_state_shardings``, and the
+        jitted step/admit/release are rebuilt with those shardings pinned on
+        inputs AND outputs (donation + the single-trace guarantee survive —
+        see spec_engine.make_sharded_slot_fns).  The engine OWNS the
+        activation sharder: it is active only inside this engine's traces
+        (act_sharding.activated), never installed globally, so other
+        engines in the process keep their own backend eligibility.
+        Outputs are bit-identical to the same engine without a mesh.
+        Known seam: a mesh pins ``attn_verify`` to the sharded XLA
+        flash-decode path — the Pallas verify kernel is single-device today
+        (models/attention.py:_use_verify_kernel), so ``backend="pallas"``
+        is ignored (with a warning) under a mesh."""
         self.params = params
         self.cfg = cfg
         self.spec = spec or SpecConfig(strategy="greedy")
         self.tok = ByteTokenizer()
         self.max_batch = max_batch
         self.max_new_cap = max_new_cap
+        self.mesh = mesh
         self._explicit_buckets = buckets is not None
+        if mesh is not None:
+            if (dispatch.use_pallas(cfg.backend)
+                    and dispatch.pallas_verify_supported(cfg)) \
+                    or dispatch.use_pallas(self.spec.backend):
+                warnings.warn(
+                    f"{cfg.name}: mesh serving pins the Pallas kernels to "
+                    f"their XLA paths (attn_verify -> sharded flash-decode, "
+                    f"drafter sweep -> XLA ref) — the kernels are "
+                    f"single-device today (kernel-dispatch seam, "
+                    f"DESIGN.md §10)")
+            self.params = jax.device_put(
+                params, shd.params_shardings(mesh, params))
         # when the verify kernel is live, size every static length (bucket
         # ladder, continuous DecodeState buffer) to kernel-friendly
         # multiples so spec_attention_op never repads the cache per step
+        # (moot under a mesh: the XLA path is pinned there)
         self._kernel_aligned = (
-            dispatch.use_pallas(cfg.backend)
+            mesh is None
+            and dispatch.use_pallas(cfg.backend)
             and dispatch.pallas_verify_supported(cfg))
         if bucket_align is None:
             bucket_align = dispatch.LANE if self._kernel_aligned else 1
@@ -123,6 +167,11 @@ class ServingEngine:
             tables = self.build_tables(k_max=max(self.spec.k, 25, arm_k),
                                        w_max=max(self.spec.w, 16, arm_w))
         self.tables = tables
+        if mesh is not None and self.tables is not None:
+            # draft tables are small integer lookups: replicate them
+            self.tables = jax.device_put(
+                self.tables, jax.tree_util.tree_map(
+                    lambda _: shd.replicated(mesh), self.tables))
         self._gen_cache: Dict = {}
         # continuous-batching state, built lazily on first step();
         # _cont_spec is the spec the continuous path actually runs —
@@ -132,13 +181,22 @@ class ServingEngine:
         self._slots: Optional[SlotMap] = None
 
     # ------------------------------------------------------------------
+    def _act(self):
+        """Scoped activation sharder: the engine's mesh is active only
+        inside its own traces and always uninstalled on exit — the
+        mesh-state-hygiene contract (a meshed engine must not pin OTHER
+        engines off the Pallas path)."""
+        return (act_sharding.activated(self.mesh) if self.mesh is not None
+                else contextlib.nullcontext())
+
     def build_tables(self, k_max: int = 16, w_max: int = 16,
                      batch: int = 256) -> NGramTables:
         """One-off model sweep (paper: <1 min for a 7B on one A100)."""
         fwd = jax.jit(lambda t: M.forward(self.params, self.cfg,
                                           tokens=t)[0][:, -1])
-        topk, chain = build_bigram(fwd, self.cfg.vocab_size, k_max=k_max,
-                                   w_max=w_max, batch=batch)
+        with self._act():
+            topk, chain = build_bigram(fwd, self.cfg.vocab_size, k_max=k_max,
+                                       w_max=w_max, batch=batch)
         uni = build_unigram(self.params["embed"]["embedding"],
                             self.params["embed"].get(
                                 "lm_head",
@@ -182,9 +240,15 @@ class ServingEngine:
         fn = self._gen_fn(batch.max_new_tokens, kw)
         eos = jnp.asarray([self._effective_eos(r) for r in batch.requests],
                           jnp.int32)
+        tokens = jnp.asarray(batch.tokens)
+        if self.mesh is not None:
+            tokens = jax.device_put(
+                tokens, shd.batch_sharding(self.mesh, tokens.shape))
+            eos = jax.device_put(eos, shd.batch_sharding(self.mesh,
+                                                         eos.shape))
         t0 = time.perf_counter()
-        buf, blen, stats = fn(self.params, jnp.asarray(batch.tokens), eos,
-                              self.tables)
+        with self._act():
+            buf, blen, stats = fn(self.params, tokens, eos, self.tables)
         buf.block_until_ready()
         dt = time.perf_counter() - t0
         if self.controller:
@@ -254,6 +318,28 @@ class ServingEngine:
         self._cont_state = empty_decode_state(self.cfg, self._cont_spec,
                                               self.max_batch, buf_size,
                                               paged=self._paged_cfg)
+        # mesh serving: place the state, then rebuild the three slot jits
+        # with every in/out sharding pinned (donation + single-trace under
+        # NamedSharding — spec_engine.make_sharded_slot_fns).  mesh=None
+        # keeps the module-level jits, shared across engines.
+        self._step_jit = self._admit_jit = self._release_jit = None
+        self._step_hlo_text: Optional[str] = None
+        if self.mesh is not None:
+            self._state_shardings = shd.decode_state_shardings(
+                self.mesh, self._cont_state)
+            self._cont_state = jax.device_put(self._cont_state,
+                                              self._state_shardings)
+            params_sh = jax.tree_util.tree_map(lambda x: x.sharding,
+                                               self.params)
+            tables_sh = (jax.tree_util.tree_map(
+                lambda _: shd.replicated(self.mesh), self.tables)
+                if self.tables is not None else None)
+            self._step_jit, self._admit_jit, self._release_jit = \
+                make_sharded_slot_fns(self.cfg, self._cont_spec,
+                                      params_sh=params_sh,
+                                      state_sh=self._state_shardings,
+                                      tables_sh=tables_sh,
+                                      scalar_sh=shd.replicated(self.mesh))
         self._slots = SlotMap(self.max_batch)
         # host-side aggregate of retired requests' arm pulls (adaptive)
         self._arm_pulls_total = (np.zeros(len(self._arms), np.int64)
@@ -274,6 +360,32 @@ class ServingEngine:
 
     def in_flight(self) -> int:
         return len(self._slots) if self._slots is not None else 0
+
+    # the three continuous-path device calls, routed through either the
+    # module-level jits (mesh=None) or this engine's sharding-pinned jits
+    def _run_step(self, state: DecodeState) -> DecodeState:
+        with self._act():
+            if self._step_jit is not None:
+                return self._step_jit(self.params, state, self.tables)
+            return spec_step(self.params, self.cfg, self._cont_spec, state,
+                             self.tables)
+
+    def _run_admit(self, state: DecodeState, slot: int, toks,
+                   mnt: int, eos: int) -> DecodeState:
+        with self._act():
+            if self._admit_jit is not None:
+                return self._admit_jit(self.params, state, jnp.int32(slot),
+                                       jnp.asarray(toks), jnp.int32(mnt),
+                                       jnp.int32(eos))
+            return admit_slot(self.params, self.cfg, state, jnp.int32(slot),
+                              jnp.asarray(toks), jnp.int32(mnt),
+                              jnp.int32(eos))
+
+    def _run_release(self, state: DecodeState, slot: int) -> DecodeState:
+        with self._act():
+            if self._release_jit is not None:
+                return self._release_jit(state, jnp.int32(slot))
+            return release_slot(state, jnp.int32(slot))
 
     def _retire_finished(self) -> List[Request]:
         state = self._cont_state
@@ -312,7 +424,7 @@ class ServingEngine:
                     for a in range(len(self._arms))
                     if arm_pulls_np[slot, a]}
                 self._arm_pulls_total += arm_pulls_np[slot].astype(np.int64)
-            state = release_slot(state, jnp.int32(slot))
+            state = self._run_release(state, slot)
             self._slots.release(slot)
             if self.paged:
                 self._page_reserved.pop(slot, None)
@@ -396,10 +508,8 @@ class ServingEngine:
                     f"{req.max_new_tokens} exceeds the engine's continuous "
                     f"max_new_cap={self.max_new_cap}; clamping (raise "
                     f"max_new_cap to honour larger budgets)")
-            state = admit_slot(self.params, self.cfg, state,
-                               jnp.int32(slot), jnp.asarray(toks),
-                               jnp.int32(mnt),
-                               jnp.int32(self._effective_eos(req)))
+            state = self._run_admit(state, slot, toks, mnt,
+                                    self._effective_eos(req))
             self._slots.assign(slot, req)
             req.stats = {"admit_t": time.perf_counter()}
             i += 1
@@ -420,9 +530,7 @@ class ServingEngine:
         # retired next step; the one no-op spec_step it gets is rarer than
         # paying a device->host sync on every step to detect it).
         if len(self._slots):
-            self._cont_state = spec_step(self.params, self.cfg,
-                                         self._cont_spec,
-                                         self._cont_state, self.tables)
+            self._cont_state = self._run_step(self._cont_state)
             if self.paged:
                 in_use = self._pool_pages - int(
                     np.asarray(self._cont_state.model["free_top"]))
@@ -458,6 +566,66 @@ class ServingEngine:
                 "peak_pages": self._pool_peak,
                 "deferrals": self._deferrals,
                 "rejected": self._rejected}
+
+    def mesh_report(self) -> Dict:
+        """Resolved sharding of THIS engine's serving state ({} without a
+        mesh): mesh shape, per-leaf DecodeState partition specs, param
+        sharding coverage, and every (logical axis, dim) that silently
+        degraded to replication — so a bench/operator can assert the mesh
+        actually sharded the state instead of serving replicated at full
+        per-device memory (distributed.sharding.ShardingFallbackWarning).
+        """
+        if self.mesh is None:
+            return {}
+        p_flat = jax.tree_util.tree_flatten_with_path(self.params)[0]
+        p_sharded = sum(
+            1 for _, leaf in p_flat
+            if any(ax is not None for ax in leaf.sharding.spec))
+        # re-resolve THIS engine's specs under a scoped recorder: the
+        # report must list only fallbacks attributable to this engine's
+        # params/state, not the process-global warning history (another
+        # engine's mesh may have produced entirely different ones)
+        with shd.recording_fallbacks() as fallbacks:
+            shd.params_shardings(self.mesh, self.params)
+            if self._cont_state is not None:
+                shd.decode_state_shardings(self.mesh, self._cont_state)
+        rep = {
+            "mesh": {str(k): int(v) for k, v in self.mesh.shape.items()},
+            "backend": "xla",   # a mesh pins attn_verify off the Pallas
+                                # kernel (DESIGN.md §10 seam)
+            "params_leaves": len(p_flat),
+            "params_sharded": p_sharded,
+            "replication_fallbacks": [list(kv) for kv in sorted(fallbacks)],
+        }
+        if self._cont_state is not None:
+            specs = shd.spec_summary(self._state_shardings)
+            rep["state_specs"] = specs
+            rep["state_sharded"] = sum(
+                1 for s in specs.values()
+                if any(f"'{ax}'" in s for ax in self.mesh.shape))
+        return rep
+
+    def step_hlo(self) -> str:
+        """Optimized HLO of the continuous spec_step for the CURRENT state
+        shapes — the mesh bench extracts per-step collective bytes from it
+        (launch/dryrun.collective_bytes).  Does not execute (donation is
+        only consumed at execution), but the AOT lower().compile() is a
+        FULL extra compile separate from the jit execution cache — so the
+        text is memoized per engine (state shapes are fixed once the
+        continuous path is initialised)."""
+        if self._cont_state is None:
+            self._init_continuous()
+        if self._step_hlo_text is None:
+            with self._act():
+                if self._step_jit is not None:
+                    lowered = self._step_jit.lower(
+                        self.params, self._cont_state, self.tables)
+                else:
+                    lowered = spec_step.lower(
+                        self.params, self.cfg, self._cont_spec,
+                        self._cont_state, self.tables)
+            self._step_hlo_text = lowered.compile().as_text()
+        return self._step_hlo_text
 
     def adaptive_stats(self) -> Dict:
         """Continuous-mode bandit telemetry: the arm table, cumulative

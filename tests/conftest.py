@@ -18,6 +18,16 @@ def pytest_configure(config):
         "inner-loop fast lane (tier-1 verification still runs everything)")
 
 
+@pytest.fixture(autouse=True)
+def _act_sharding_hygiene():
+    """No test may leak an installed activation-sharder mesh into the next
+    one: an installed mesh silently pins attn_verify off the Pallas path
+    for the whole process (models/attention.py:_use_verify_kernel)."""
+    yield
+    from repro.distributed import act_sharding
+    act_sharding.uninstall()
+
+
 @pytest.fixture(scope="session")
 def tiny_dense_cfg():
     return ModelConfig(name="tiny", num_layers=2, d_model=64, num_heads=4,

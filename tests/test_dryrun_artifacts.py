@@ -45,3 +45,48 @@ def test_pod_matrix_complete_when_present():
     if len(recs) < 40:
         pytest.skip(f"pod matrix incomplete ({len(recs)}/40)")
     assert len(recs) == 40
+
+
+# ---------------------------------------------------------------------------
+# import hygiene: the dry-run's 512-device override must never leak out of
+# its own entry point (regression: it used to clobber XLA_FLAGS at import,
+# breaking jax device state for anything that imported the module)
+# ---------------------------------------------------------------------------
+def test_importing_dryrun_does_not_mutate_xla_flags():
+    import importlib
+    import sys
+    before = os.environ.get("XLA_FLAGS")
+    sys.modules.pop("repro.launch.dryrun", None)
+    mod = importlib.import_module("repro.launch.dryrun")
+    assert os.environ.get("XLA_FLAGS") == before, (
+        "importing repro.launch.dryrun mutated XLA_FLAGS — the placeholder-"
+        "device override may only apply when run as the dry-run script")
+    assert mod.__doc__ and "Multi-pod dry-run" in mod.__doc__, (
+        "the module docstring must stay FIRST (ahead of the entry-point "
+        "guard) or help()/pydoc lose the documented usage")
+
+
+def test_device_flag_appends_and_respects_caller(monkeypatch):
+    """The one shared device-count policy (launch/hostdev.py, used by the
+    dry-run and the --mesh entry points): append to caller XLA_FLAGS,
+    never clobber; a caller-chosen count wins; refuse once jax is up."""
+    import sys
+
+    from repro.launch import hostdev
+    # with jax imported (this process), the env must be left alone
+    monkeypatch.setenv("XLA_FLAGS", "--marker")
+    assert hostdev.ensure_host_devices(512) is False
+    assert os.environ["XLA_FLAGS"] == "--marker"
+    # pre-jax (simulated): caller flags are appended to, not clobbered
+    monkeypatch.delitem(sys.modules, "jax")     # restored by monkeypatch
+    monkeypatch.setenv("XLA_FLAGS", "--xla_cpu_enable_fast_math=false")
+    assert hostdev.ensure_host_devices(512) is True
+    assert os.environ["XLA_FLAGS"].startswith(
+        "--xla_cpu_enable_fast_math=false ")
+    assert "device_count=512" in os.environ["XLA_FLAGS"]
+    # a caller-chosen device count wins outright
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=8")
+    assert hostdev.ensure_host_devices(512) is False
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=8"
