@@ -82,7 +82,7 @@ def make_workload(n: int, rate_hz: float, seed: int = 0
 
 
 def _summary(lat: Dict[int, float], toks: int, busy_s: float,
-             calls: int = 0) -> Dict:
+             calls: int = 0, hist: Optional[List[int]] = None) -> Dict:
     ls = np.asarray(sorted(lat.values()))
     out = {"requests": len(ls),
            "new_tokens": toks,
@@ -92,7 +92,18 @@ def _summary(lat: Dict[int, float], toks: int, busy_s: float,
            "p99_latency_s": round(float(np.percentile(ls, 99)), 4)}
     if calls:
         out["tokens_per_call"] = round(toks / calls, 3)
+    if hist is not None:
+        out["accept_hist"] = hist
     return out
+
+
+def _add_hist(agg: List[int], h: List[int]) -> List[int]:
+    """Element-wise sum of acceptance-length histograms (index = tokens
+    committed by one verify call, 0..w+1); ragged lengths zero-extend so
+    mixed (k, w) runs — adaptive arms, warm restarts — still aggregate."""
+    if len(h) > len(agg):
+        agg = agg + [0] * (len(h) - len(agg))
+    return [a + (h[i] if i < len(h) else 0) for i, a in enumerate(agg)]
 
 
 def run_static(eng, workload) -> Dict:
@@ -103,6 +114,8 @@ def run_static(eng, workload) -> Dict:
     arrival: Dict[int, float] = {}
     latency: Dict[int, float] = {}
     toks = 0
+    calls = 0
+    hist: List[int] = []
     busy = 0.0
     t0 = time.perf_counter()
     while pending or eng.scheduler.pending():
@@ -122,7 +135,9 @@ def run_static(eng, workload) -> Dict:
         for r in reqs:
             latency[r.request_id] = done_t - arrival[r.request_id]
             toks += r.stats["new_tokens"]
-    return _summary(latency, toks, busy)
+            calls += r.stats.get("model_calls", 0)
+            hist = _add_hist(hist, r.stats.get("accept_hist", []))
+    return _summary(latency, toks, busy, calls, hist)
 
 
 def run_continuous(eng, workload,
@@ -133,6 +148,7 @@ def run_continuous(eng, workload,
     latency: Dict[int, float] = {}
     toks = 0
     calls = 0
+    hist: List[int] = []
     busy = 0.0
     t0 = time.perf_counter()
     while pending or eng.scheduler.pending() or eng.in_flight():
@@ -153,13 +169,14 @@ def run_continuous(eng, workload,
             latency[r.request_id] = done_t - arrival[r.request_id]
             toks += r.stats["new_tokens"]
             calls += r.stats.get("model_calls", 0)
+            hist = _add_hist(hist, r.stats.get("accept_hist", []))
             if out_ids is not None:
                 # keyed by SUBMISSION ordinal (request_ids are process-
                 # global), so runs of the same workload compare directly
                 # (the sharded-vs-baseline parity check)
                 out_ids[order[r.request_id]] = \
                     np.asarray(r.output_ids).tolist()
-    return _summary(latency, toks, busy, calls)
+    return _summary(latency, toks, busy, calls, hist)
 
 
 # ---------------------------------------------------------------------------
@@ -402,6 +419,148 @@ def run_mesh(mesh_shape, n: int = 24, rate_hz: float = 4.0,
     return res
 
 
+# ---------------------------------------------------------------------------
+# tree vs linear speculation at matched verify-call cost (--tree): BENCH_tree
+# ---------------------------------------------------------------------------
+# Verify-call cost = query positions scored per call: k*(w+1) for linear
+# batched rows (every row re-scores the shared root), num_nodes+1 for a
+# tree (the ancestor mask scores the root ONCE).  That root dedup is the
+# measured tree lever on this byte-level model: a branch-1 tree (width, d)
+# carries the exact acceptance behaviour of linear (k=width, w=d) for
+# width-1 fewer positions, and spending the savings on extra width/depth
+# beats the best same-cost linear reshape (probed against a dense
+# (k, w) frontier, 4 workload seeds).  Multi-level branching (b >= 2)
+# costs width^2 positions per branched level, which byte-level branching
+# entropy never pays back — kept as one arm so the JSON documents that
+# verdict honestly (negative advantage).
+#
+# Pairs put the tree at most ONE position above its linear partner:
+#   tree w10 d3 b1 =  31  vs  linear (6, 4)  = 30  (best linear <= 31)
+#   tree w14 d5 b1 =  71  vs  linear (12, 5) = 72  (best linear <= 72)
+#   tree w16 d5 b1 =  81  vs  linear (16, 4) = 80  (best linear <= 81)
+#   tree w4  d5 b2 =  69  vs  linear (12, 5) = 72  (branching verdict)
+LINEAR_ARMS = ((4, 4), (6, 4), (5, 5), (12, 5), (14, 4), (16, 4), (16, 8))
+TREE_ARMS = ((10, 3, 1), (14, 5, 1), (16, 5, 1), (4, 5, 2))
+TREE_PAIRS = (("tree_w10_d3_b1", "linear_k6_w4"),
+              ("tree_w14_d5_b1", "linear_k12_w5"),
+              ("tree_w16_d5_b1", "linear_k16_w4"),
+              ("tree_w4_d5_b2", "linear_k12_w5"))
+TREE_BUCKET = 128
+
+
+def make_repetitive_prompts(n: int, seed: int = 0) -> List[str]:
+    """Repetitive mix with BRANCHING ambiguity — the workload trees are for.
+
+    Half the prompts loop one chunk verbatim (pure repetition: n-gram
+    drafters chain the tail, any k works).  The other half alternate TWO
+    chunks sharing a prefix, so at the seam the top-1 n-gram successor is
+    right only half the time while the top-2 set always contains the truth:
+    a linear draft burns a whole row per guess, a width>=2 tree covers both
+    and keeps chaining below each."""
+    rng = np.random.default_rng(seed)
+    texts = [p for p, _ in make_prompts("code", n, seed=1)]
+    out = []
+    for i, t in enumerate(texts):
+        a = t[:14].strip() or "for i in"
+        if i % 2 == 0:
+            body = (a + " ") * 8                          # pure repetition
+        else:
+            b = (a[:6] + t[20:28]).strip() or a + "x"     # shared prefix
+            body = "".join((a if j % 2 else b) + " " for j in range(8))
+        out.append(body[:TREE_BUCKET - 1])
+    return out
+
+
+def run_tree(n: int = 12, max_new: int = 48, max_batch: int = 4,
+             seed: int = 0) -> Dict:
+    ensure_dirs()
+    from repro.core.tree import num_nodes
+    cfg, params = get_trained()
+    tables = get_tables(cfg, params, k_max=16, w_max=10)
+    prompts = make_repetitive_prompts(n, seed)
+
+    def serve(spec) -> Tuple[Dict, List[list]]:
+        eng = ServingEngine(params, cfg, spec, tables=tables,
+                            max_batch=max_batch, buckets=(TREE_BUCKET,),
+                            max_new_cap=max_new)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        reqs = sorted(eng.serve_all(), key=lambda r: r.request_id)
+        wall = time.perf_counter() - t0
+        toks = sum(r.stats["new_tokens"] for r in reqs)
+        calls = sum(r.stats["model_calls"] for r in reqs)
+        hist: List[int] = []
+        for r in reqs:
+            hist = _add_hist(hist, r.stats.get("accept_hist", []))
+        summary = {"new_tokens": toks, "model_calls": calls,
+                   "tokens_per_call": round(toks / max(calls, 1), 3),
+                   "wall_s": round(wall, 3),
+                   "accept_hist": hist}
+        return summary, [np.asarray(r.output_ids).tolist() for r in reqs]
+
+    res = {"workload": {"n": n, "max_new": max_new, "max_batch": max_batch,
+                        "seed": seed, "bucket": TREE_BUCKET,
+                        "mix": "repetitive + 2-way branching seams"},
+           "configs": {}}
+    # greedy reference once: every speculative config below must reproduce
+    # it token for token (tree mode is lossless, not approximate)
+    _, ref_out = serve(SpecConfig(strategy="greedy", max_new_tokens=max_new))
+    for k, w in LINEAR_ARMS:
+        s, out = serve(SpecConfig(k=k, w=w, strategy="mixed",
+                                  max_new_tokens=max_new))
+        assert out == ref_out, f"linear ({k},{w}) diverged from greedy"
+        s["verify_cost"] = k * (w + 1)
+        res["configs"][f"linear_k{k}_w{w}"] = s
+    for wd, dp, br in TREE_ARMS:
+        s, out = serve(SpecConfig(k=wd, w=dp, strategy="mixed",
+                                  max_new_tokens=max_new,
+                                  tree=True, tree_branch=br))
+        assert out == ref_out, f"tree ({wd},{dp},{br}) diverged from greedy"
+        s["verify_cost"] = num_nodes(wd, dp, br) + 1
+        res["configs"][f"tree_w{wd}_d{dp}_b{br}"] = s
+    res["parity"] = "bit-exact vs greedy"
+    res["pairs"] = []
+    for tname, lname in TREE_PAIRS:
+        t, l = res["configs"][tname], res["configs"][lname]
+        res["pairs"].append({
+            "tree": tname, "linear": lname,
+            "tree_cost": t["verify_cost"], "linear_cost": l["verify_cost"],
+            "tree_tokens_per_call": t["tokens_per_call"],
+            "linear_tokens_per_call": l["tokens_per_call"],
+            "tree_advantage": round(
+                t["tokens_per_call"] - l["tokens_per_call"], 3)})
+    best_lin = max((r["tokens_per_call"] for name, r in
+                    res["configs"].items() if name.startswith("linear")))
+    best_tree = max((r["tokens_per_call"] for name, r in
+                     res["configs"].items() if name.startswith("tree")))
+    res["best_linear_tokens_per_call"] = best_lin
+    res["best_tree_tokens_per_call"] = best_tree
+    # headline: each tree vs the BEST linear arm it could have been traded
+    # for (any linear arm costing at most one position more), not just its
+    # named partner — a tree only counts as winning if no same-budget
+    # linear reshape beats it
+    res["headline"] = []
+    for name, t in res["configs"].items():
+        if not name.startswith("tree"):
+            continue
+        elig = {ln: l for ln, l in res["configs"].items()
+                if ln.startswith("linear")
+                and l["verify_cost"] <= t["verify_cost"] + 1}
+        bn = max(elig, key=lambda ln: elig[ln]["tokens_per_call"])
+        res["headline"].append({
+            "tree": name, "tree_cost": t["verify_cost"],
+            "tree_tokens_per_call": t["tokens_per_call"],
+            "best_linear_at_cost": bn,
+            "best_linear_cost": elig[bn]["verify_cost"],
+            "best_linear_tokens_per_call": elig[bn]["tokens_per_call"],
+            "advantage": round(t["tokens_per_call"]
+                               - elig[bn]["tokens_per_call"], 3)})
+    with open("BENCH_tree.json", "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
 def run(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
         seed: int = 0) -> Dict:
     ensure_dirs()
@@ -460,7 +619,35 @@ def main() -> None:
                          "(e.g. 2x2) vs the 1-device engine, assert bit "
                          "parity, report per-step collective bytes, and "
                          "write BENCH_sharded.json")
+    ap.add_argument("--tree", action="store_true",
+                    help="benchmark tree-structured speculation against "
+                         "linear batched rows at matched verify-call cost "
+                         "on the repetitive/branching mix and write "
+                         "BENCH_tree.json (DESIGN.md §11)")
     args = ap.parse_args()
+    if args.tree:
+        res = run_tree(max(args.n, 4), max_batch=args.max_batch,
+                       seed=args.seed)
+        print("config,verify_cost,tokens_per_call,accept_hist")
+        for name, r in res["configs"].items():
+            print(f"{name},{r['verify_cost']},{r['tokens_per_call']},"
+                  f"\"{r['accept_hist']}\"")
+        for p in res["pairs"]:
+            print(f"pair {p['tree']} (cost {p['tree_cost']}) vs "
+                  f"{p['linear']} (cost {p['linear_cost']}): "
+                  f"{p['tree_tokens_per_call']} vs "
+                  f"{p['linear_tokens_per_call']} tokens/call "
+                  f"(advantage {p['tree_advantage']:+.3f})")
+        for h in res["headline"]:
+            print(f"headline {h['tree']} (cost {h['tree_cost']}) vs best "
+                  f"same-cost linear {h['best_linear_at_cost']} "
+                  f"(cost {h['best_linear_cost']}): "
+                  f"{h['tree_tokens_per_call']} vs "
+                  f"{h['best_linear_tokens_per_call']} tokens/call "
+                  f"(advantage {h['advantage']:+.3f})")
+        print(f"parity: {res['parity']}")
+        print("wrote BENCH_tree.json")
+        return
     if args.mesh:
         res = run_mesh(hostdev.parse_mesh_shape(args.mesh), args.n,
                        args.rate, args.max_batch, args.seed)

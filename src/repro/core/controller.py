@@ -132,6 +132,22 @@ def arm_slowdowns(cfg: ModelConfig, arms: Tuple[Tuple[int, int], ...],
                  for (k, w) in arms)
 
 
+def tree_arm_slowdowns(cfg: ModelConfig,
+                       arms: Tuple[Tuple[int, int], ...],
+                       branch: int, ell: int = 512) -> Tuple[float, ...]:
+    """Roofline prior for TREE arms (DESIGN.md §11).
+
+    A (width, depth) tree arm verifies num_nodes(width, depth, branch) + 1
+    tokens as ONE row, so its call cost is modeled as a single row of that
+    many positions — slowdown(cfg, ell, 1, N) — not as width independent
+    rows.  Depth-0 arms verify only the root (plain greedy): 1.0.
+    """
+    from .tree import num_nodes
+    return tuple(
+        slowdown(cfg, ell, 1, num_nodes(k, w, branch)) if w > 0 else 1.0
+        for (k, w) in arms)
+
+
 def choose_arms(stats: Dict[str, jnp.ndarray],
                 slowdowns: Tuple[float, ...],
                 explore: float = 0.3) -> jnp.ndarray:

@@ -220,6 +220,20 @@ def mixed_draft(tables: NGramTables, buf: jnp.ndarray, cur_len: jnp.ndarray,
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Context N-gram matches first, extended model bigram fills the rest.
 
+    Bigram fill rows are DEDUPLICATED against the context rows: a bigram
+    candidate row identical to a committed context row would burn a verify
+    row for zero acceptance gain (the earlier row wins every tie), so fill
+    position r takes the r-th bigram candidate NOT duplicating a context
+    row instead.  The skip decision for candidate j depends only on the
+    context rows (the rows before every fill position) and never on k
+    itself, and the m-th surviving candidate always has index
+    <= m + n_ctx < k_b for the positions a (k_b <= k) arm keeps — so the
+    dedup is prefix-consistent in k and the DESIGN.md §9 masked-arm parity
+    contract is preserved (depth consistency comes from multi_depth_draft:
+    rows are compared at the sweep's own w).  If duplicates outnumber the
+    spare candidates the tail positions fall back to duplicate rows
+    (harmless: fixed shapes require k rows).
+
     Returns (drafts (B,k,w), valid (B,k), n_context (B,) — allocation stat).
     """
     ctx_d, ctx_v = context_ngram_draft(buf, cur_len, q, k, w, backend=backend)
@@ -231,7 +245,12 @@ def mixed_draft(tables: NGramTables, buf: jnp.ndarray, cur_len: jnp.ndarray,
     n_ctx = ctx_v.sum(axis=1)                              # (B,)
     row = jnp.arange(k)[None, :]
     use_ctx = row < n_ctx[:, None]
-    big_idx = jnp.clip(row - n_ctx[:, None], 0, k - 1)
+    # dup[b, j]: bigram candidate j token-identical to a context row in use
+    dup = (big_d[:, :, None, :] == ctx_sorted[:, None, :, :]).all(axis=-1)
+    dup = (dup & use_ctx[:, None, :]).any(axis=-1)         # (B, k)
+    seq = jnp.argsort(dup, axis=1, stable=True)            # non-dups first,
+    big_pos = jnp.clip(row - n_ctx[:, None], 0, k - 1)     # in index order
+    big_idx = jnp.take_along_axis(seq, big_pos, axis=1)
     big_fill = jnp.take_along_axis(big_d, big_idx[..., None], axis=1)
     drafts = jnp.where(use_ctx[..., None], ctx_sorted, big_fill)
     valid = jnp.ones((B, k), bool)

@@ -38,6 +38,19 @@ per-slot UCB (core/controller.py) and is MASKED down to it — bit-identical
 to a dedicated static step of that arm, with zero recompiles across arm
 switches.  The bandit's (B, A) state rides in ``DecodeState.stats`` and is
 zeroed with the rest of the slot's stats on admission/release.
+
+Tree mode (DESIGN.md §11): ``SpecConfig.tree`` swaps the k independent
+linear rows for ONE token tree per slot (core/tree.py): the first
+``min(tree_branch, w)`` depths branch over the drafter's top-k candidates,
+deeper levels chain on argmax, and the whole tree is verified in a single
+(B, 1, N+1) call whose attention uses the topology's static ancestor mask.
+Acceptance runs over the tree's root-to-leaf PATHS (each bit-identical to a
+linear row of the same tokens), the winning path's KV tail is gathered and
+committed through the unchanged ``commit_kv_tails``.  Under ``arms`` the
+(k, w) pairs read as (tree_width, depth) arms, masked by path eligibility
+(all branch indices < width_b) — the same zero-recompile contract as §9.
+Attention-only archs only: recurrent mixers verify rows as causal
+sequences, which has no valid tree layout (validate_tree raises).
 """
 from __future__ import annotations
 
@@ -52,8 +65,9 @@ from ..kernels import dispatch
 from ..models import cache as C
 from ..models import model as M
 from ..models.config import ModelConfig
+from . import tree as T
 from .controller import (arm_slowdowns, choose_arms, init_arm_stats,
-                         update_arm_stats)
+                         tree_arm_slowdowns, update_arm_stats)
 from .drafters import (bigram_draft, context_ngram_draft, mixed_draft,
                        multi_depth_draft, unigram_draft)
 from .ngram_tables import NGramTables
@@ -102,6 +116,28 @@ class SpecConfig:
     adapt_explore: float = 0.3  # UCB exploration coefficient
     adapt_ema: float = 0.9      # per-arm tokens-per-call EMA decay
     adapt_ell: int = 512        # context length of the roofline prior
+    # Tree mode (DESIGN.md §11): verify one top-k draft TREE per slot
+    # instead of k independent rows.  (k, w) read as (tree width, depth);
+    # ``tree_branch`` is how many of the first depths fan out over the
+    # drafter's top-k candidates (deeper levels argmax-chain).  Under
+    # ``arms`` the arm table reads as (width, depth) pairs in the same
+    # [1, k] x [0, w] box.  Attention-only archs, tables required.
+    tree: bool = False
+    tree_branch: int = 2
+
+    def validate_tree(self) -> "SpecConfig":
+        """Raise unless the tree knobs are a buildable topology."""
+        if not self.tree:
+            return self
+        if self.strategy == "greedy":
+            raise ValueError("tree mode needs a drafting strategy "
+                             "(strategy='greedy' verifies nothing)")
+        if self.w < 1:
+            raise ValueError(f"tree mode needs w >= 1, got w={self.w}")
+        if self.tree_branch < 1:
+            raise ValueError(
+                f"tree_branch must be >= 1, got {self.tree_branch}")
+        return self
 
     def validate_arms(self) -> "SpecConfig":
         """Raise unless the arm table fits the compile-time (k, w) box."""
@@ -177,11 +213,14 @@ def _draft(spec: SpecConfig, tables: NGramTables, buf, buf_len, last):
 
 
 def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
+    # tree mode ranks over root-to-leaf PATHS, not drafter rows
+    ranks = (T.num_paths(spec.k, spec.w, spec.tree_branch) if spec.tree
+             else max(spec.k, 1))
     st = {
         "calls": jnp.zeros((B,), jnp.int32),
         "tokens": jnp.zeros((B,), jnp.int32),
         "accept_hist": jnp.zeros((B, spec.w + 2), jnp.int32),   # n_commit 0..w+1
-        "rank_hist": jnp.zeros((B, max(spec.k, 1)), jnp.int32),
+        "rank_hist": jnp.zeros((B, max(ranks, 1)), jnp.int32),
         "alloc_ctx": jnp.zeros((B, spec.k + 1), jnp.int32),     # n_ctx per call
         "accepted_ctx": jnp.zeros((B,), jnp.int32),             # drafted tokens
         "accepted_bigram": jnp.zeros((B,), jnp.int32),          # accepted per src
@@ -229,6 +268,7 @@ def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
     buffer / logical KV capacity per slot) is rounded up to whole pages.
     """
     spec.validate_arms()
+    spec.validate_tree()
     B = num_slots
     if paged is not None:
         ps = paged.resolve_page_size(cfg)
@@ -269,6 +309,7 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
     (ServingEngine's page-reservation admission).
     """
     spec.validate_arms()
+    spec.validate_tree()
     B, P = prompt.shape
     budget = (jnp.full((B,), spec.max_new_tokens, jnp.int32)
               if max_new_tokens is None
@@ -451,6 +492,18 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
     adaptive = spec.arms is not None
     if adaptive:
         spec.validate_arms()
+    topo = None
+    if spec.tree:
+        spec.validate_tree()
+        if M.has_recurrent(cfg):
+            raise ValueError(
+                "tree speculation needs an attention-only arch: recurrent "
+                "mixers verify rows as causal sequences, which has no "
+                "valid tree layout (DESIGN.md §11)")
+        if tables is None:
+            raise ValueError("tree speculation needs NGramTables "
+                             "(off-spine branches come from bigram_topk)")
+        topo = T.topology(spec.k, spec.w, spec.tree_branch)
     if C.is_paged(s.model):
         # on-the-fly page growth: this step commits at most w+1 tokens per
         # row (positions cur_len .. cur_len+w), so cover cur_len + w + 1
@@ -467,8 +520,10 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
         # per-slot, per-step arm selection INSIDE the jit: UCB over the
         # slot's own (B, A) stats, then mask the fixed (k_max, w_max)
         # shapes down to the chosen arm — no recompile can ever occur
-        arm = choose_arms(st, arm_slowdowns(cfg, spec.arms, spec.adapt_ell),
-                          spec.adapt_explore)                   # (B,)
+        slow = (tree_arm_slowdowns(cfg, spec.arms, spec.tree_branch,
+                                   spec.adapt_ell) if spec.tree
+                else arm_slowdowns(cfg, spec.arms, spec.adapt_ell))
+        arm = choose_arms(st, slow, spec.adapt_explore)         # (B,)
         k_eff = jnp.asarray([a[0] for a in spec.arms], jnp.int32)[arm]
         w_eff = jnp.asarray([a[1] for a in spec.arms], jnp.int32)[arm]
         drafts, valid, n_ctx = _draft_adaptive(spec, tables, buf_c, len_c,
@@ -476,12 +531,36 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
     else:
         arm = k_eff = w_eff = None
         drafts, valid, n_ctx = _draft(spec, tables, buf_c, len_c, last)
-    rows = jnp.concatenate(
-        [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
-        axis=-1)                                                # (B,k,w+1)
-    logits, tails = M.verify(params, cfg, state_c, rows)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    acc = accept(drafts, greedy, k_eff=k_eff, w_eff=w_eff)
+    if spec.tree:
+        # ONE (B, 1, N+1) verify call scores the whole token tree; the
+        # topology's ancestor mask + per-level positions make every
+        # root-to-leaf path bit-identical to a linear row of its tokens
+        nodes = T.fill_tree(topo, drafts, tables,
+                            buf=buf_c, buf_len=len_c)           # (B, N)
+        rows = jnp.concatenate([last[:, None], nodes],
+                               axis=1)[:, None, :]              # (B,1,N+1)
+        logits, tails = M.verify(params, cfg, state_c, rows,
+                                 pos_off=topo.pos_off,
+                                 tail_mask=topo.anc_mask)
+        greedy_n = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        # path views: (B, P, w) draft tokens / (B, P, w+1) greedy preds
+        drafts_pv = jnp.take(nodes, topo.path_nodes, axis=1)
+        greedy_pv = jnp.take(greedy_n, topo.path_inputs, axis=1)
+        row_mask = None
+        if adaptive:
+            # a (width_b, depth_b) arm keeps exactly the paths whose branch
+            # indices all fall below width_b (NOT a prefix of the path
+            # list — eligibility is scattered through lex order)
+            row_mask = (jnp.asarray(topo.path_max_branch, jnp.int32)[None]
+                        < k_eff[:, None])
+        acc = accept(drafts_pv, greedy_pv, w_eff=w_eff, row_mask=row_mask)
+    else:
+        rows = jnp.concatenate(
+            [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
+            axis=-1)                                            # (B,k,w+1)
+        logits, tails = M.verify(params, cfg, state_c, rows)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        acc = accept(drafts, greedy, k_eff=k_eff, w_eff=w_eff)
     active = s.active & (~done_c) & (len_c - s.prompt_len < s.budget)
     budget = jnp.maximum(s.prompt_len + s.budget - len_c, 0)
     n_commit = jnp.where(active, jnp.minimum(acc.n_commit, budget), 0)
@@ -492,7 +571,17 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
     n_commit = jnp.where(has_eos, first_eos + 1, n_commit)
     done_c = done_c | (has_eos & active)
     # commit the model state
-    if not M.has_recurrent(cfg):
+    if spec.tree:
+        # gather the winning PATH's verify inputs out of the (N+1)-wide
+        # tree tails -> a (w+1)-wide linear tail, then the stock commit
+        # (winner row 0 of 1) writes it — linear AND paged paths unchanged
+        sel = jnp.asarray(topo.path_inputs, jnp.int32)[acc.winner]  # (B,w+1)
+        idx = sel[None, :, None, :, None, None]
+        tails = {g: {kk: jnp.take_along_axis(tt, idx, axis=3)
+                     for kk, tt in d.items()} for g, d in tails.items()}
+        state_n = M.commit_kv_tails(cfg, state_c, tails,
+                                    jnp.zeros((B,), jnp.int32), n_commit)
+    elif not M.has_recurrent(cfg):
         state_n = M.commit_kv_tails(cfg, state_c, tails, acc.winner,
                                     n_commit)
     else:
@@ -523,7 +612,10 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
     st["alloc_ctx"] = st["alloc_ctx"].at[
         jnp.arange(B), jnp.clip(n_ctx, 0, spec.k)].add(
             active.astype(jnp.int32))
-    from_ctx = acc.winner < n_ctx
+    # winning path's origin: the drafter row its first branch tracks (tree)
+    # or the winning row itself (linear)
+    from_ctx = (jnp.asarray(topo.path_first, jnp.int32)[acc.winner] < n_ctx
+                if spec.tree else acc.winner < n_ctx)
     acc_drafted = jnp.maximum(n_commit - 1, 0)
     st["accepted_ctx"] = st["accepted_ctx"] + jnp.where(
         active & from_ctx, acc_drafted, 0)

@@ -1,0 +1,260 @@
+"""Static draft-tree topology for tree-structured batched speculation.
+
+Linear speculation (DESIGN.md §3) verifies k independent w-token rows and
+commits the best one; every row re-drafts the FULL depth, so rows that agree
+on a prefix burn verify positions re-scoring it, and a slot can only follow
+ONE alternative per depth.  Tree speculation (SpecInfer/Medusa-style,
+DESIGN.md §11) instead verifies a single token *tree* per slot: the first
+``branch`` depths fan out over the drafter's top-``width`` candidates and
+every leaf continues as an argmax chain, so shared prefixes are scored once
+and the step can recover at any of the first ``branch`` depths where the
+model's choice was only the drafter's 2nd..width-th guess.
+
+Everything here is host-side numpy computed from STATIC ints
+(width, depth, branch) — the topology folds into the jitted ``spec_step``
+as compile-time constants (arrays below are baked into the trace), which is
+what keeps tree arms inside the PR-4 zero-recompile masking contract.
+
+Node/tuple convention: a node at depth ``l`` (1-based) is identified by its
+branch tuple ``(b_1, .., b_l)`` with ``b_j < width`` for ``j <= branch`` and
+``b_j == 0`` beyond; nodes are enumerated level-major, lexicographically
+within a level, so the leaf paths come out in lexicographic tuple order.
+Restricting to tuples with all entries ``< width_b`` preserves that order —
+the masked-arm bit-parity argument (DESIGN.md §11) leans on exactly this.
+
+The *verify inputs* are ``[root] + nodes``: input 0 is the last committed
+token, input ``i+1`` is node ``i``; ``anc_mask[i, j]`` allows input i to
+attend input j iff j is an ancestor-or-self of i, so each root-to-leaf path
+behaves bit-identically to a linear draft row of the same tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class TreeTopology(NamedTuple):
+    """Static tree layout (all numpy; see module docstring for conventions)."""
+    width: int
+    depth: int
+    branch: int
+    parent: np.ndarray           # (N,) int32 parent node id, -1 = root
+    level: np.ndarray            # (N,) int32 1-based depth of each node
+    child: np.ndarray            # (N,) int32 branch-candidate index b_l
+    spine: np.ndarray            # (N,) bool — tuple is (b_1, 0, .., 0)
+    spine_row: np.ndarray        # (N,) int32 b_1 (the drafter row a spine tracks)
+    sibling0: np.ndarray         # (N,) int32 node id of the parent's child 0
+    path_nodes: np.ndarray       # (P, depth) int32 node ids along each leaf path
+    path_inputs: np.ndarray      # (P, depth+1) int32 verify-input ids (root=0)
+    path_max_branch: np.ndarray  # (P,) int32 max tuple entry (width masking)
+    path_first: np.ndarray       # (P,) int32 b_1 of each path
+    pos_off: np.ndarray          # (N+1,) int32 query-position offset per input
+    anc_mask: np.ndarray         # (N+1, N+1) bool ancestor-or-self visibility
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.parent.shape[0])
+
+    @property
+    def num_paths(self) -> int:
+        return int(self.path_nodes.shape[0])
+
+
+def effective_branch(depth: int, branch: int) -> int:
+    return max(1, min(branch, depth)) if depth > 0 else 0
+
+
+def num_nodes(width: int, depth: int, branch: int) -> int:
+    """Node count of topology(width, depth, branch) without building it."""
+    d = effective_branch(depth, branch)
+    branched = sum(width ** j for j in range(1, d + 1))
+    return branched + (width ** d) * (depth - d)
+
+
+def num_paths(width: int, depth: int, branch: int) -> int:
+    return width ** effective_branch(depth, branch) if depth > 0 else 0
+
+
+@functools.lru_cache(maxsize=None)
+def topology(width: int, depth: int, branch: int) -> TreeTopology:
+    """Build the static topology for a (width, depth, branch) tree.
+
+    Levels 1..min(branch, depth) fan out ``width`` children per node; deeper
+    levels extend every leaf with a single chain child.  Cached: the same
+    arrays are reused across traces of the same spec.
+    """
+    if width < 1 or depth < 1 or branch < 1:
+        raise ValueError(
+            f"tree needs width >= 1, depth >= 1, branch >= 1; got "
+            f"({width}, {depth}, {branch})")
+    d = effective_branch(depth, branch)
+    parent, level, child, spine, spine_row, sibling0 = [], [], [], [], [], []
+    node_of: dict = {}
+    prev: list = [(-1, ())]                       # (node id, tuple) per leaf
+    for lvl in range(1, depth + 1):
+        wmax = width if lvl <= d else 1
+        cur = []
+        for pid, pt in prev:
+            c0 = len(parent)                      # id the 0-child will get
+            for b in range(wmax):
+                nid = len(parent)
+                t = pt + (b,)
+                node_of[t] = nid
+                parent.append(pid)
+                level.append(lvl)
+                child.append(b)
+                spine.append(all(x == 0 for x in t[1:]))
+                spine_row.append(t[0])
+                sibling0.append(c0)
+                cur.append((nid, t))
+        prev = cur
+    N = len(parent)
+    P = len(prev)
+    path_nodes = np.zeros((P, depth), np.int32)
+    path_max_branch = np.zeros((P,), np.int32)
+    path_first = np.zeros((P,), np.int32)
+    for p, (nid, t) in enumerate(prev):
+        n = nid
+        for j in range(depth - 1, -1, -1):
+            path_nodes[p, j] = n
+            n = parent[n]
+        path_max_branch[p] = max(t)
+        path_first[p] = t[0]
+    path_inputs = np.concatenate(
+        [np.zeros((P, 1), np.int32), path_nodes + 1], axis=1)
+    anc = np.zeros((N + 1, N + 1), bool)
+    anc[0, 0] = True                              # root attends itself
+    anc[1:, 0] = True                             # every node attends root
+    for i in range(N):
+        anc[i + 1, i + 1] = True
+        a = parent[i]
+        while a >= 0:
+            anc[i + 1, a + 1] = True
+            a = parent[a]
+    return TreeTopology(
+        width=width, depth=depth, branch=branch,
+        parent=np.asarray(parent, np.int32),
+        level=np.asarray(level, np.int32),
+        child=np.asarray(child, np.int32),
+        spine=np.asarray(spine, bool),
+        spine_row=np.asarray(spine_row, np.int32),
+        sibling0=np.asarray(sibling0, np.int32),
+        path_nodes=path_nodes,
+        path_inputs=path_inputs,
+        path_max_branch=path_max_branch,
+        path_first=path_first,
+        pos_off=np.concatenate([np.zeros((1,), np.int32),
+                                np.asarray(level, np.int32)]),
+        anc_mask=anc)
+
+
+def _context_next(buf: jnp.ndarray, buf_len: jnp.ndarray, gp: jnp.ndarray,
+                  p: jnp.ndarray, fallback: jnp.ndarray) -> jnp.ndarray:
+    """Buffer-local continuation of the (grandparent, parent) token pair.
+
+    Finds the LATEST committed position j with ``buf[j] == gp`` and
+    ``buf[j+1] == p`` whose continuation ``buf[j+2]`` is itself committed,
+    and returns that continuation; rows with no such occurrence keep
+    ``fallback`` (the global bigram argmax).  This is the order-2 flavour of
+    the paper's context n-gram lookup re-seeded at a HYPOTHETICAL token —
+    something only the tree layout can exploit (a linear row IS its seed).
+    """
+    S = buf.shape[1]
+    pos = jnp.arange(S - 1, dtype=jnp.int32)
+    m = (buf[:, :-1] == gp[:, None]) & (buf[:, 1:] == p[:, None])
+    m &= (pos[None, :] + 2) < buf_len[:, None]
+    j = jnp.max(jnp.where(m, pos[None, :], -1), axis=1)
+    cont = jnp.take_along_axis(
+        buf, jnp.clip(j + 2, 0, S - 1)[:, None], axis=1)[:, 0]
+    return jnp.where(j >= 0, cont, fallback)
+
+
+def fill_tree(topo: TreeTopology, drafts: jnp.ndarray, tables,
+              buf: jnp.ndarray | None = None,
+              buf_len: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token content for every tree node: (B, k, w) linear drafts -> (B, N).
+
+    Spine nodes (tuple (b, 0, .., 0)) replay drafter row b verbatim, so the
+    tree's path set is a SUPERSET of the linear draft rows — tree acceptance
+    at equal (width, depth) can only match or beat linear.  Off-spine
+    children of node with token t take the model-bigram top candidates
+    ``tables.bigram_topk[t]``; children of a *spine* parent additionally
+    skip the candidate equal to the spine continuation (it is already the
+    0-child), so a branch level never verifies the same token twice — the
+    in-tree rendering of the mixed_draft dedup (DESIGN.md §11).
+
+    When the committed token buffer is provided (``buf``/``buf_len``), the
+    chain *tails* below a deviation are context-seeded: each chain child
+    re-queries the buffer-local order-2 n-gram at its (grandparent, parent)
+    hypothesis and copies what followed, falling back to the global bigram
+    argmax when the pair never occurred.  A deviated branch thereby commits
+    a workload-specific continuation in the SAME call that tested the
+    branch — the lever behind the BENCH_tree seam wins — while branch
+    levels keep the pure bigram top-k candidate lists (sibling sets stay
+    duplicate-free).
+
+    Dedicated-run parity (masked tree arms): every rule here depends only on
+    the node's ancestors, a static candidate index and the shared committed
+    buffer, never on ``width`` itself, so the nodes shared by a
+    (width_b <= width) sub-tree carry identical tokens — see DESIGN.md §11
+    for the full argument.
+
+    Token correctness is NOT assumed anywhere: verification rejects any
+    wrong token, so this only shapes tokens-per-call, never output content.
+    """
+    kmax = int(tables.bigram_topk.shape[1])
+    if kmax < topo.width:
+        raise ValueError(
+            f"tree width {topo.width} needs bigram tables with k_max >= "
+            f"width, got k_max={kmax}")
+    big = tables.bigram_topk
+    d = effective_branch(topo.depth, topo.branch)
+    last = None
+    if buf is not None:
+        last = jnp.take_along_axis(
+            buf, (buf_len - 1)[:, None], axis=1)[:, 0]
+    toks = []
+    for n in range(topo.num_nodes):
+        lvl = int(topo.level[n])
+        if bool(topo.spine[n]):
+            t = drafts[:, int(topo.spine_row[n]), lvl - 1]
+        else:
+            pid = int(topo.parent[n])
+            p_tok = toks[pid]
+            cands = big[p_tok]                            # (B, k_max)
+            c = int(topo.child[n])
+            if buf is not None and lvl > d:
+                # chain tail below a deviation: context-seed from the
+                # committed buffer (grandparent of a level-2 node is the
+                # root, i.e. the last committed token)
+                gp = last if int(topo.level[pid]) == 1 else \
+                    toks[int(topo.parent[pid])]
+                t = _context_next(buf, buf_len, gp, p_tok, cands[:, 0])
+            elif bool(topo.spine[int(topo.parent[n])]):
+                # parent is on a spine: its 0-child is the drafter row's own
+                # continuation; take candidate c-1, skipping over the
+                # candidate that duplicates it (at most one — rows of
+                # bigram_topk are distinct)
+                s_tok = toks[int(topo.sibling0[n])]
+                m = cands[:, :topo.width] == s_tok[:, None]
+                j_dup = jnp.where(m.any(axis=1), jnp.argmax(m, axis=1),
+                                  kmax + 1)
+                base = jnp.full_like(j_dup, c - 1)
+                idx = base + (j_dup <= base)
+                t = jnp.take_along_axis(cands, idx[:, None], axis=1)[:, 0]
+            else:
+                # deviated parent: children are the candidate list directly
+                # (0-child == argmax == the bigram chain continuation)
+                t = cands[:, c]
+        toks.append(t.astype(jnp.int32))
+    return jnp.stack(toks, axis=1)                        # (B, N)
+
+
+def arm_topologies(arms: Tuple[Tuple[int, int], ...], branch: int
+                   ) -> Tuple[int, ...]:
+    """Verify-node count per (width, depth) arm (0-depth arms verify only
+    the root).  Used by the tree-aware roofline prior."""
+    return tuple(num_nodes(k, w, branch) if w > 0 else 0 for k, w in arms)

@@ -13,18 +13,16 @@ emits one *bonus* token (the model's prediction after its last accepted
 token), so every call commits n* + 1 >= 1 tokens and the output equals plain
 greedy decoding token-for-token.
 
-Per-slot arm masking (DESIGN.md §9): ``k_eff``/``w_eff`` restrict slot b to
-its arm's (k_b, w_b) sub-problem inside the shared (k_max, w_max) shapes —
-rows >= k_b can never win and acceptance is truncated at w_b, so the result
-is bit-identical to a dedicated (k_b, w_b) call (drafters are prefix-
-consistent in both k and w; attention is causal per row).  w_b == 0
-degenerates to plain greedy decoding: every row's n_acc is 0, row 0 wins,
-and the single committed token is the model's prediction after the last
-committed token.
+Per-slot arm masking (DESIGN.md §9, §11): ``masked_acceptance`` restricts
+slot b to its arm's sub-problem inside the shared compile-time shapes.  The
+"rows" here are linear draft rows in linear mode and root-to-leaf PATHS of
+the draft tree in tree mode — the tree path-walk reuses this helper with a
+``row_mask`` of path eligibility instead of the prefix mask ``k_eff``
+induces.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,25 +35,66 @@ class Acceptance(NamedTuple):
     n_acc: jnp.ndarray     # (B, k) per-row accepted-draft lengths (stats)
 
 
-def accept(drafts: jnp.ndarray, greedy: jnp.ndarray,
-           k_eff: Optional[jnp.ndarray] = None,
-           w_eff: Optional[jnp.ndarray] = None) -> Acceptance:
-    """drafts: (B, k, w) int32; greedy: (B, k, w+1) int32 argmax predictions.
+def masked_acceptance(eq: jnp.ndarray,
+                      k_eff: Optional[jnp.ndarray] = None,
+                      w_eff: Optional[jnp.ndarray] = None,
+                      row_mask: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Arm-mask a per-token match matrix down to per-row ranking scores.
 
-    ``k_eff`` (B,) / ``w_eff`` (B,) optionally mask slot b down to its arm's
-    (k_b, w_b): acceptance stops at draft depth w_b and rows >= k_b are
-    excluded from the winner argmax (their n_acc still reports the unmasked
-    depth-truncated value for stats).
+    eq: (B, k, w) bool — token j of row i matched the model's greedy
+    prediction.  Returns ``(n_acc, n_rank)``, both (B, k) int32:
+
+      - ``n_acc[b, i]``  = longest matching prefix of row i, truncated at
+        slot b's depth ``w_eff[b]`` when given (depth masking: a masked step
+        may carry draft tokens past the slot's arm depth — zeros, stale
+        shallower sweeps — that a dedicated run never drafted, so they must
+        not extend acceptance);
+      - ``n_rank[b, i]`` = n_acc with winner-INELIGIBLE rows forced to -1,
+        so ``argmax(n_rank)`` can never select them while every eligible
+        row (n_acc >= 0) still outranks them.  Eligibility is the AND of
+        ``i < k_eff[b]`` (linear arms: rows are ordered best-first, an arm
+        keeps a prefix) and ``row_mask[b, i]`` (tree arms: a
+        (width_b, depth_b) arm keeps the paths whose branch choices all lie
+        below width_b — NOT a prefix of the lex-ordered path list).
+
+    Degenerate masks behave like the dedicated run they mask down to:
+    ``w_eff == 0`` zeroes every n_acc (plain greedy: row/path 0 wins, only
+    the bonus token commits); ``k_eff == 1`` makes row 0 the only candidate;
+    an all-False eq changes nothing (bonus-only step).  At least one row
+    must stay eligible — k_eff >= 1 and a row_mask containing the all-0
+    branch path guarantee that by construction.
     """
-    B, k, w = drafts.shape
-    eq = drafts == greedy[..., :w]
+    B, k, w = eq.shape
     if w_eff is not None:
         eq = eq & (jnp.arange(w)[None, None, :] < w_eff[:, None, None])
     n_acc = jnp.cumprod(eq.astype(jnp.int32), axis=-1).sum(axis=-1)  # (B,k)
-    n_rank = n_acc
+    eligible = jnp.ones((B, k), bool)
     if k_eff is not None:
-        n_rank = jnp.where(jnp.arange(k)[None, :] < k_eff[:, None],
-                           n_acc, -1)
+        eligible = eligible & (jnp.arange(k)[None, :] < k_eff[:, None])
+    if row_mask is not None:
+        eligible = eligible & row_mask
+    n_rank = jnp.where(eligible, n_acc, -1)
+    return n_acc, n_rank
+
+
+def accept(drafts: jnp.ndarray, greedy: jnp.ndarray,
+           k_eff: Optional[jnp.ndarray] = None,
+           w_eff: Optional[jnp.ndarray] = None,
+           row_mask: Optional[jnp.ndarray] = None) -> Acceptance:
+    """drafts: (B, k, w) int32; greedy: (B, k, w+1) int32 argmax predictions.
+
+    ``k_eff`` (B,) / ``w_eff`` (B,) / ``row_mask`` (B, k) optionally mask
+    slot b down to its arm's sub-problem (see ``masked_acceptance``): rows
+    outside the arm are excluded from the winner argmax and acceptance
+    stops at the arm depth (excluded rows' n_acc still reports the unmasked
+    depth-truncated value for stats).  In tree mode the "rows" are
+    root-to-leaf paths gathered from the verified node tree.
+    """
+    B, k, w = drafts.shape
+    eq = drafts == greedy[..., :w]
+    n_acc, n_rank = masked_acceptance(eq, k_eff=k_eff, w_eff=w_eff,
+                                      row_mask=row_mask)
     winner = jnp.argmax(n_rank, axis=-1).astype(jnp.int32)           # (B,)
     n_win = jnp.take_along_axis(n_acc, winner[:, None], axis=1)[:, 0]
     d_win = jnp.take_along_axis(drafts, winner[:, None, None],

@@ -25,10 +25,11 @@ buffer length at which that per-step repad never happens.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ops, ref
 
@@ -100,39 +101,59 @@ def pallas_verify_supported(cfg) -> bool:
             and cfg.sliding_window is None)
 
 
+def _static_mask(tail_mask) -> Optional[Tuple[Tuple[bool, ...], ...]]:
+    """numpy (N, N) bool -> hashable tuple-of-tuples for the jitted ops.
+
+    The tail mask is a compile-time tree-topology constant (DESIGN.md §11),
+    so it belongs in the jit cache key: one kernel instantiation per
+    topology, zero per-call operands.
+    """
+    if tail_mask is None:
+        return None
+    return tuple(map(tuple, np.asarray(tail_mask, bool).tolist()))
+
+
 def verify_attention(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
-                     w1: int, block_s: int = 0) -> jnp.ndarray:
+                     w1: int, block_s: int = 0,
+                     tail_mask=None) -> jnp.ndarray:
     """Pallas bifurcated verify attention in the engine layout.
 
     q: (B, K, W1, H, hd); caches (B, S, KV, hd); tails (B, K, W1, KV, hd);
     cur_len (B,).  Returns (B, K, W1, H, hd).
 
+    ``tail_mask``: optional static (K*W1, K*W1) bool numpy array replacing
+    the per-row causal tail mask — tree verification's ancestor-only
+    visibility (DESIGN.md §11; K == 1 there, the tree is one "row").
+
     Masked-shape contract (adaptive arms, DESIGN.md §9): K/W1 are the
     compile-time maxima; a slot running a smaller (k, w) arm simply has its
-    surplus rows/positions ignored downstream (attention is causal per row,
-    so the extra positions cannot influence the accepted prefix) — one
-    compilation serves every arm.
+    surplus rows/positions ignored downstream (attention is causal per row
+    / ancestor-only per tree node, so the extra positions cannot influence
+    the accepted prefix) — one compilation serves every arm.
     """
     bs = block_s if block_s else ops.DEFAULT_BLOCK_S
     return ops.spec_attention_op(q, k_cache, v_cache, k_tail, v_tail,
                                  cur_len, w1=w1, block_s=bs,
-                                 interpret=default_interpret())
+                                 interpret=default_interpret(),
+                                 tail_mask=_static_mask(tail_mask))
 
 
 def verify_attention_paged(q, k_pool, v_pool, page_table, k_tail, v_tail,
-                           cur_len, *, w1: int) -> jnp.ndarray:
+                           cur_len, *, w1: int, tail_mask=None) -> jnp.ndarray:
     """Pallas bifurcated verify attention over a paged KV pool.
 
     q: (B, K, W1, H, hd); pools (num_pages, page_size, KV, hd); page_table
     (B, pages_per_slot) int32 (-1 = unallocated); tails (B, K, W1, KV, hd);
-    cur_len (B,).  Returns (B, K, W1, H, hd).  The kernel's cache-block grid
-    walks the page table (one grid step per page), so page_size plays the
-    role block_s has on the linear path.  The same masked-shape contract as
+    cur_len (B,); tail_mask as in ``verify_attention``.  Returns
+    (B, K, W1, H, hd).  The kernel's cache-block grid walks the page table
+    (one grid step per page), so page_size plays the role block_s has on
+    the linear path.  The same masked-shape contract as
     ``verify_attention`` applies: K/W1 are arm-table maxima, one compile.
     """
     return ops.paged_spec_attention_op(q, k_pool, v_pool, page_table,
                                        k_tail, v_tail, cur_len, w1=w1,
-                                       interpret=default_interpret())
+                                       interpret=default_interpret(),
+                                       tail_mask=_static_mask(tail_mask))
 
 
 # ----------------------------------------------------------------------------

@@ -12,6 +12,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .ngram_match import DEFAULT_BLOCK_L, ngram_match_call
@@ -34,12 +35,18 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("w1", "block_s", "interpret"))
+                   static_argnames=("w1", "block_s", "interpret",
+                                    "tail_mask"))
 def spec_attention_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
                       w1: int, block_s: int = DEFAULT_BLOCK_S,
-                      interpret: bool | None = None) -> jnp.ndarray:
+                      interpret: bool | None = None,
+                      tail_mask=None) -> jnp.ndarray:
     """Engine-facing layout: q (B,K,W1,H,hd); caches (B,S,KV,hd);
-    tails (B,K,W1,KV,hd); cur_len (B,).  Returns (B,K,W1,H,hd)."""
+    tails (B,K,W1,KV,hd); cur_len (B,).  Returns (B,K,W1,H,hd).
+
+    ``tail_mask``: optional STATIC tail-visibility matrix as a hashable
+    tuple-of-tuples of bool (a topology constant, so it is part of the jit
+    cache key on purpose — dispatch.py converts from numpy)."""
     if interpret is None:
         interpret = _default_interpret()
     B, K, W1, H, hd = q.shape
@@ -53,21 +60,25 @@ def spec_attention_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
     bs = min(block_s, S)
     kc, S0 = _pad_to(kc, 2, bs)
     vc, _ = _pad_to(vc, 2, bs)
+    tm = None if tail_mask is None else np.asarray(tail_mask, bool)
     # padded cache slots have slot >= S0 >= cur_len -> masked by cur_len test
     # (serving avoids the per-call repad by sizing its buffers through
     # dispatch.align_cache_len; arbitrary lengths stay correct here)
     out = spec_attention_call(qk, kc, vc, kt, vt, cur_len.astype(jnp.int32),
-                              w1=W1, block_s=bs, interpret=interpret)
+                              w1=W1, block_s=bs, interpret=interpret,
+                              tail_mask=tm)
     return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
 
 
-@functools.partial(jax.jit, static_argnames=("w1", "interpret"))
+@functools.partial(jax.jit, static_argnames=("w1", "interpret", "tail_mask"))
 def paged_spec_attention_op(q, k_pool, v_pool, page_table, k_tail, v_tail,
                             cur_len, *, w1: int,
-                            interpret: bool | None = None) -> jnp.ndarray:
+                            interpret: bool | None = None,
+                            tail_mask=None) -> jnp.ndarray:
     """Engine-facing paged layout: q (B,K,W1,H,hd);
     pools (num_pages, page_size, KV, hd); page_table (B, pages_per_slot);
-    tails (B,K,W1,KV,hd); cur_len (B,).  Returns (B,K,W1,H,hd).
+    tails (B,K,W1,KV,hd); cur_len (B,); tail_mask as in spec_attention_op.
+    Returns (B,K,W1,H,hd).
 
     No cache padding path exists here on purpose: the pool is whole pages by
     construction (page_size == the kernel's block_s), which is exactly why
@@ -82,15 +93,16 @@ def paged_spec_attention_op(q, k_pool, v_pool, page_table, k_tail, v_tail,
     vp = v_pool.transpose(0, 2, 1, 3)
     kt = k_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
     vt = v_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    tm = None if tail_mask is None else np.asarray(tail_mask, bool)
     out = paged_spec_attention_call(qk, kp, vp,
                                     page_table.astype(jnp.int32), kt, vt,
                                     cur_len.astype(jnp.int32), w1=W1,
-                                    interpret=interpret)
+                                    interpret=interpret, tail_mask=tm)
     return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
 
 
 def spec_attention_ref_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
-                          w1: int) -> jnp.ndarray:
+                          w1: int, tail_mask=None) -> jnp.ndarray:
     """Oracle with the same engine-facing layout."""
     B, K, W1, H, hd = q.shape
     KV = k_cache.shape[2]
@@ -99,8 +111,10 @@ def spec_attention_ref_op(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
     vc = v_cache.transpose(0, 2, 1, 3)
     kt = k_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
     vt = v_tail.transpose(0, 3, 1, 2, 4).reshape(B, KV, K * W1, hd)
+    tm = None if tail_mask is None else np.asarray(tail_mask, bool)
     out = ref.spec_attention_ref(qk, kc, vc, kt, vt,
-                                 cur_len.astype(jnp.int32), w1=W1)
+                                 cur_len.astype(jnp.int32), w1=W1,
+                                 tail_mask=tm)
     return out.reshape(B, H, K, W1, hd).transpose(0, 2, 3, 1, 4)
 
 

@@ -8,11 +8,12 @@ from .hashing import hash_step
 
 
 def spec_attention_ref(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
-                       w1: int) -> jnp.ndarray:
+                       w1: int, tail_mask=None) -> jnp.ndarray:
     """Same contract as spec_attention_call, computed densely in f32.
 
     q: (B,H,KW1,hd); k/v_cache: (B,KV,S,hd); k/v_tail: (B,KV,KW1,hd);
-    cur_len: (B,).
+    cur_len: (B,).  ``tail_mask``: optional static (KW1, KW1) bool tail
+    visibility (tree ancestor mask) replacing the per-row causal mask.
     """
     B, H, KW1, hd = q.shape
     KV, S = k_cache.shape[1], k_cache.shape[2]
@@ -25,10 +26,12 @@ def spec_attention_ref(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
     lc = jnp.where(valid[:, None, None, None, :], lc, -1e30)
     lt = jnp.einsum("bngqh,bnth->bngqt", qf,
                     k_tail.astype(jnp.float32)) * scale
-    qi = jnp.arange(KW1)
-    same_row = (qi[:, None] // w1) == (qi[None, :] // w1)
-    causal = (qi[None, :] % w1) <= (qi[:, None] % w1)
-    lt = jnp.where(same_row & causal, lt, -1e30)
+    if tail_mask is None:
+        qi = jnp.arange(KW1)
+        same_row = (qi[:, None] // w1) == (qi[None, :] // w1)
+        causal = (qi[None, :] % w1) <= (qi[:, None] % w1)
+        tail_mask = same_row & causal
+    lt = jnp.where(jnp.asarray(tail_mask, bool), lt, -1e30)
     logits = jnp.concatenate([lc, lt], axis=-1)
     w = jax.nn.softmax(logits, axis=-1)
     out = (jnp.einsum("bngqs,bnsh->bngqh", w[..., :S],

@@ -21,6 +21,17 @@ row-block-diagonal causal mask: query row i = (draft r_i, offset t_i) may
 attend tail key j = (r_j, t_j) iff r_i == r_j and t_j <= t_i — drafts never
 see each other, exactly the paper's batched independence.
 
+Tree variant (DESIGN.md §11): tree-structured speculation verifies one
+(N+1)-node token TREE per slot instead of k independent rows.  The only
+kernel-visible difference is the tail mask: ancestor-only visibility
+(``tail_mask[i, j]`` = input j is an ancestor-or-self of input i) replaces
+the row-block-diagonal causal mask.  The mask is a static topology
+constant; Pallas forbids capturing array constants in the kernel body, so
+it rides as a tiny lane-padded int32 operand whose index map is constant —
+the pipeline fetches the same (KW1, KW1) block once, not per cache block —
+and the cache-streaming half is untouched: every tree node attends the
+whole committed context exactly like a linear row.
+
 Paged variant (DESIGN.md §8): the cache streaming is already block-shaped,
 so the page-pool layout costs the kernel nothing — ``paged_spec_attention_call``
 keeps the SAME kernel body and only swaps the cache index map: the pool is
@@ -36,15 +47,32 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_S = 512
 NEG_INF = -1e30
+LANE = 128          # TPU lane width: the mask operand is lane-padded
 
 
-def _kernel(cur_len_ref, q_ref, k_ref, v_ref, kt_ref, vt_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, w1: int, scale: float, block_s: int):
+def _pad_mask(tail_mask, kw1: int) -> np.ndarray:
+    """(KW1, KW1) bool -> lane-padded (KW1, KW1p) int32 kernel operand."""
+    tm = np.asarray(tail_mask, bool)
+    assert tm.shape == (kw1, kw1), (tm.shape, kw1)
+    kp = -(-kw1 // LANE) * LANE
+    out = np.zeros((kw1, kp), np.int32)
+    out[:, :kw1] = tm
+    return out
+
+
+def _kernel(cur_len_ref, q_ref, k_ref, v_ref, kt_ref, vt_ref, *rest,
+            w1: int, scale: float, block_s: int, tree: bool = False):
+    if tree:          # trailing operand: lane-padded int32 tail mask
+        tm_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        tm_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     s = pl.program_id(2)
     n_s = pl.num_programs(2)
@@ -82,11 +110,17 @@ def _kernel(cur_len_ref, q_ref, k_ref, v_ref, kt_ref, vt_ref, o_ref,
         lt = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32) * scale
         kw1 = lt.shape[0]
-        qi = jax.lax.broadcasted_iota(jnp.int32, (kw1, kw1), 0)
-        kj = jax.lax.broadcasted_iota(jnp.int32, (kw1, kw1), 1)
-        same_row = (qi // w1) == (kj // w1)
-        causal = (kj % w1) <= (qi % w1)
-        lt = jnp.where(same_row & causal, lt, NEG_INF)
+        if tm_ref is None:
+            qi = jax.lax.broadcasted_iota(jnp.int32, (kw1, kw1), 0)
+            kj = jax.lax.broadcasted_iota(jnp.int32, (kw1, kw1), 1)
+            same_row = (qi // w1) == (kj // w1)
+            causal = (kj % w1) <= (qi % w1)
+            mask = same_row & causal
+        else:
+            # tree ancestor mask (DESIGN.md §11): constant-index-map block,
+            # statically sliced back down from its lane padding
+            mask = tm_ref[...][:, :kw1] != 0
+        lt = jnp.where(mask, lt, NEG_INF)
 
         m_p, l_p, a_p = m_scr[...], l_scr[...], acc_scr[...]
         m_c = jnp.max(lt, axis=-1)
@@ -102,11 +136,16 @@ def _kernel(cur_len_ref, q_ref, k_ref, v_ref, kt_ref, vt_ref, o_ref,
 
 def spec_attention_call(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
                         w1: int, block_s: int = DEFAULT_BLOCK_S,
-                        interpret: bool = False) -> jnp.ndarray:
+                        interpret: bool = False,
+                        tail_mask=None) -> jnp.ndarray:
     """q: (B, H, KW1, hd) — KW1 = k*(w+1) rows, k-major.
     k_cache/v_cache: (B, KV, S, hd) (linear cache, slot == position).
     k_tail/v_tail:   (B, KV, KW1, hd) per-row speculative KV.
     cur_len: (B,) int32.  Returns (B, H, KW1, hd), dtype of q.
+
+    ``tail_mask``: optional STATIC (KW1, KW1) bool replacing the
+    row-block-diagonal causal tail mask — tree speculation passes the
+    topology's ancestor mask here (DESIGN.md §11).
 
     S must be a multiple of block_s (ops.py pads).
     """
@@ -118,23 +157,30 @@ def spec_attention_call(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
     grid = (B, H, S // block_s)
     scale = 1.0 / (hd ** 0.5)
 
-    kernel = functools.partial(_kernel, w1=w1, scale=scale, block_s=block_s)
+    kernel = functools.partial(_kernel, w1=w1, scale=scale, block_s=block_s,
+                               tree=tail_mask is not None)
+    in_specs = [
+        pl.BlockSpec((1, 1, KW1, hd), lambda b, h, s, c: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_s, hd),
+                     lambda b, h, s, c: (b, h // G, s, 0)),
+        pl.BlockSpec((1, 1, block_s, hd),
+                     lambda b, h, s, c: (b, h // G, s, 0)),
+        pl.BlockSpec((1, 1, KW1, hd),
+                     lambda b, h, s, c: (b, h // G, 0, 0)),
+        pl.BlockSpec((1, 1, KW1, hd),
+                     lambda b, h, s, c: (b, h // G, 0, 0)),
+    ]
+    operands = [cur_len, q, k_cache, v_cache, k_tail, v_tail]
+    if tail_mask is not None:
+        tm = _pad_mask(tail_mask, KW1)
+        in_specs.append(pl.BlockSpec(tm.shape, lambda b, h, s, c: (0, 0)))
+        operands.append(tm)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, KW1, hd), lambda b, h, s, c: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, block_s, hd),
-                             lambda b, h, s, c: (b, h // G, s, 0)),
-                pl.BlockSpec((1, 1, block_s, hd),
-                             lambda b, h, s, c: (b, h // G, s, 0)),
-                pl.BlockSpec((1, 1, KW1, hd),
-                             lambda b, h, s, c: (b, h // G, 0, 0)),
-                pl.BlockSpec((1, 1, KW1, hd),
-                             lambda b, h, s, c: (b, h // G, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, KW1, hd),
                                    lambda b, h, s, c: (b, h, 0, 0)),
             scratch_shapes=[
@@ -145,7 +191,7 @@ def spec_attention_call(q, k_cache, v_cache, k_tail, v_tail, cur_len, *,
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, KW1, hd), q.dtype),
         interpret=interpret,
-    )(cur_len, q, k_cache, v_cache, k_tail, v_tail)
+    )(*operands)
 
 
 def _paged_kernel(cur_len_ref, pt_ref, *rest, **kw):
@@ -157,12 +203,14 @@ def _paged_kernel(cur_len_ref, pt_ref, *rest, **kw):
 
 def paged_spec_attention_call(q, k_pool, v_pool, page_table, k_tail, v_tail,
                               cur_len, *, w1: int,
-                              interpret: bool = False) -> jnp.ndarray:
+                              interpret: bool = False,
+                              tail_mask=None) -> jnp.ndarray:
     """q: (B, H, KW1, hd); k_pool/v_pool: (num_pages, KV, page_size, hd);
-    page_table: (B, pages_per_slot) int32, -1 = unallocated; tails/cur_len
-    as in spec_attention_call.  block_s == page_size by construction, so the
-    grid's cache axis walks the slot's page table: pages_per_slot steps per
-    (batch, head), each DMA-ing one whole physical page.
+    page_table: (B, pages_per_slot) int32, -1 = unallocated; tails/cur_len/
+    tail_mask as in spec_attention_call.  block_s == page_size by
+    construction, so the grid's cache axis walks the slot's page table:
+    pages_per_slot steps per (batch, head), each DMA-ing one whole physical
+    page.
     """
     B, H, KW1, hd = q.shape
     NP, KV, ps = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
@@ -175,22 +223,31 @@ def paged_spec_attention_call(q, k_pool, v_pool, page_table, k_tail, v_tail,
     def page_ix(b, h, s, cl, pt):
         return (jnp.maximum(pt[b, s], 0), h // G, 0, 0)
 
-    kernel = functools.partial(_paged_kernel, w1=w1, scale=scale, block_s=ps)
+    kernel = functools.partial(_paged_kernel, w1=w1, scale=scale, block_s=ps,
+                               tree=tail_mask is not None)
+    in_specs = [
+        pl.BlockSpec((1, 1, KW1, hd),
+                     lambda b, h, s, cl, pt: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, ps, hd), page_ix),
+        pl.BlockSpec((1, 1, ps, hd), page_ix),
+        pl.BlockSpec((1, 1, KW1, hd),
+                     lambda b, h, s, cl, pt: (b, h // G, 0, 0)),
+        pl.BlockSpec((1, 1, KW1, hd),
+                     lambda b, h, s, cl, pt: (b, h // G, 0, 0)),
+    ]
+    operands = [cur_len, page_table.astype(jnp.int32), q, k_pool, v_pool,
+                k_tail, v_tail]
+    if tail_mask is not None:
+        tm = _pad_mask(tail_mask, KW1)
+        in_specs.append(pl.BlockSpec(tm.shape,
+                                     lambda b, h, s, cl, pt: (0, 0)))
+        operands.append(tm)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, KW1, hd),
-                             lambda b, h, s, cl, pt: (b, h, 0, 0)),
-                pl.BlockSpec((1, 1, ps, hd), page_ix),
-                pl.BlockSpec((1, 1, ps, hd), page_ix),
-                pl.BlockSpec((1, 1, KW1, hd),
-                             lambda b, h, s, cl, pt: (b, h // G, 0, 0)),
-                pl.BlockSpec((1, 1, KW1, hd),
-                             lambda b, h, s, cl, pt: (b, h // G, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, KW1, hd),
                                    lambda b, h, s, cl, pt: (b, h, 0, 0)),
             scratch_shapes=[
@@ -201,4 +258,4 @@ def paged_spec_attention_call(q, k_pool, v_pool, page_table, k_tail, v_tail,
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, KW1, hd), q.dtype),
         interpret=interpret,
-    )(cur_len, page_table, q, k_pool, v_pool, k_tail, v_tail)
+    )(*operands)

@@ -47,6 +47,15 @@ def main() -> None:
                          "static serving, per slot per step (shape-stable "
                          "arm masking inside the one jitted spec_step, "
                          "DESIGN.md §9) under --continuous")
+    ap.add_argument("--tree", action="store_true",
+                    help="tree-structured speculation (DESIGN.md §11): "
+                         "branch on the top --k candidates at the first "
+                         "--tree-branch depths, verify the whole token tree "
+                         "in ONE ancestor-masked forward call; bit-identical "
+                         "outputs, attention-only archs")
+    ap.add_argument("--tree-branch", type=int, default=2,
+                    help="number of branching levels in the draft tree "
+                         "(deeper levels chain greedily); only with --tree")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache for continuous batching: slots "
                          "share a page pool with per-slot page tables "
@@ -103,7 +112,8 @@ def main() -> None:
         print(f"  final loss {float(m['loss']):.3f}")
 
     spec = SpecConfig(k=args.k, w=args.w, strategy=args.strategy,
-                      max_new_tokens=args.max_new, backend=args.backend)
+                      max_new_tokens=args.max_new, backend=args.backend,
+                      tree=args.tree, tree_branch=args.tree_branch)
     eng = ServingEngine(params, cfg, spec, max_batch=args.n_prompts,
                         max_new_cap=args.max_new, adaptive=args.adaptive,
                         paged=args.paged,

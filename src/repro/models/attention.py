@@ -215,12 +215,16 @@ def attn_full(params: Params, x: jnp.ndarray, cfg: ModelConfig,
 
 
 def _verify_attention_xla(q, k_cache, v_cache, k_tail, v_tail, cache_pos,
-                          pos2d, cfg: ModelConfig) -> jnp.ndarray:
+                          pos2d, cfg: ModelConfig,
+                          tail_mask=None) -> jnp.ndarray:
     """XLA backend of the bifurcated verify attention.
 
     q: (B,K,W1,H,hd); caches (B,S,KV,hd); tails (B,K,W1,KV,hd);
     cache_pos: (B,S) absolute position per slot (-1 = empty, ring-aware);
-    pos2d: (B,W1) query positions.  Returns (B,K,W1,H,hd) f32.
+    pos2d: (B,W1) query positions.  ``tail_mask``: optional STATIC
+    (W1, W1) bool tail visibility replacing the causal triangle — tree
+    verification's ancestor mask (DESIGN.md §11; K == 1 there).
+    Returns (B,K,W1,H,hd) f32.
 
     This is the fully-general path (softcap, sliding-window ring caches,
     sharded context logits); the Pallas backend covers the linear-cache
@@ -251,8 +255,13 @@ def _verify_attention_xla(q, k_cache, v_cache, k_tail, v_tail, cache_pos,
     ll = jnp.einsum("bkwnGh,bkvnh->bknGwv", qg, kn) * scale
     if cfg.attn_logit_softcap:
         ll = cfg.attn_logit_softcap * jnp.tanh(ll / cfg.attn_logit_softcap)
-    causal = jnp.tril(jnp.ones((W1, W1), bool))
-    ll = jnp.where(causal[None, None, None, None], ll, -1e30)
+    if tail_mask is None:
+        local = jnp.tril(jnp.ones((W1, W1), bool))
+    else:
+        # tree ancestor mask; applied within each of the K rows (tree mode
+        # flattens the whole tree into the single row K == 1)
+        local = jnp.asarray(tail_mask, bool)
+    ll = jnp.where(local[None, None, None, None], ll, -1e30)
     # merged softmax WITHOUT concatenating [lc | ll]: a concat would force
     # the sharded context logits to be gathered; here only per-row max/sum
     # scalars cross the cache's sharding (flash-decode style, §Perf it-7).
@@ -286,7 +295,8 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
                 k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                 cache_pos: jnp.ndarray,
                 cur_len: Optional[jnp.ndarray] = None,
-                page_table: Optional[jnp.ndarray] = None
+                page_table: Optional[jnp.ndarray] = None,
+                tail_mask=None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Bifurcated batched-speculation attention (the paper's verification).
 
@@ -296,6 +306,10 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
     with no cross-row attention.
 
     positions: (B, w1) or (3, B, w1) — identical for all k rows.
+    tail_mask: optional STATIC (w1, w1) bool numpy array replacing the causal
+    tail triangle — tree verification's ancestor-only visibility
+    (DESIGN.md §11; the tree rides as the single row k == 1, so the
+    (k*w1, k*w1) kernel mask and this per-row mask coincide).
     cur_len: (B,) committed cache length (linear caches); enables the Pallas
     backend (kernels/dispatch.py) when ``cfg.backend`` resolves to pallas.
     page_table: (B, pages_per_slot) when the cache is PAGED (DESIGN.md §8) —
@@ -332,20 +346,22 @@ def attn_verify(params: Params, x: jnp.ndarray, cfg: ModelConfig,
             from ..kernels import dispatch
             out = dispatch.verify_attention_paged(qk, k_cache, v_cache,
                                                   page_table, kn, vn,
-                                                  cur_len, w1=W1)
+                                                  cur_len, w1=W1,
+                                                  tail_mask=tail_mask)
         else:
             from .cache import gather_pages
             k_lin, v_lin = gather_pages(k_cache, v_cache, page_table)
             out = _verify_attention_xla(qk, k_lin, v_lin, kn, vn, cache_pos,
-                                        pos2d, cfg)
+                                        pos2d, cfg, tail_mask=tail_mask)
     elif _use_verify_kernel(cfg, cur_len):
         from ..kernels import dispatch
         out = dispatch.verify_attention(qk, k_cache, v_cache, kn, vn,
                                         cur_len, w1=W1,
-                                        block_s=cfg.kernel_block_s)
+                                        block_s=cfg.kernel_block_s,
+                                        tail_mask=tail_mask)
     else:
         out = _verify_attention_xla(qk, k_cache, v_cache, kn, vn, cache_pos,
-                                    pos2d, cfg)
+                                    pos2d, cfg, tail_mask=tail_mask)
     out = out.reshape(B, K, W1, cfg.num_heads * hd).astype(cd)
     y = out @ params["wo"].astype(cd)
     return y, kn, vn

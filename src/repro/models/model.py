@@ -151,18 +151,38 @@ def decode(params: Params, cfg: ModelConfig, state: State,
 
 
 def verify(params: Params, cfg: ModelConfig, state: State,
-           tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+           tokens: jnp.ndarray, pos_off=None,
+           tail_mask=None) -> Tuple[jnp.ndarray, Dict]:
     """The paper's batched verification call.
 
     tokens: (B, k, w+1) — row i is [last_token, draft_i(0..w-1)].
     Returns (logits (B, k, w+1, V) f32, kv_tails for attention groups).
     State is NOT advanced (pure read).
+
+    Tree mode (DESIGN.md §11) passes the whole token tree as the single row
+    k == 1 with two STATIC topology constants:
+      pos_off:   (w+1,) int numpy array — per-node position offset (tree
+                 LEVEL, 0 for the committed last token) replacing the linear
+                 arange; node i gets absolute position cur + pos_off[i].
+      tail_mask: (w+1, w+1) bool numpy array — ancestor-or-self visibility
+                 between tree nodes, threaded to the attention tail mask.
+    Recurrent mixers run verify rows as causal SEQUENCES, which has no valid
+    tree layout — callers gate tree mode on ``not has_recurrent(cfg)``
+    (core/spec_engine.py raises at config validation).
     """
     B, K, W1 = tokens.shape
     cur = state["cur_len"]
-    positions = make_positions(cfg, B, W1, offset=cur)
+    if pos_off is None:
+        positions = make_positions(cfg, B, W1, offset=cur)
+    else:
+        pos = (jnp.asarray(pos_off, jnp.int32)[None, :]
+               + cur[:, None])                            # (B, W1)
+        if cfg.rope == MROPE:
+            pos = jnp.broadcast_to(pos[None], (3, B, W1))
+        positions = pos
     gid0 = next((gid for gid, s, _ in group_ids(cfg) if s.mixer == ATTN), None)
-    ctx: Dict[str, Any] = {"positions": positions, "k_rows": K}
+    ctx: Dict[str, Any] = {"positions": positions, "k_rows": K,
+                           "tail_mask": tail_mask}
     if gid0 is not None:
         if is_paged(state):
             _, ps, pps = paged_dims(state)

@@ -115,6 +115,14 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.spec = spec or SpecConfig(strategy="greedy")
+        if self.spec.tree:
+            self.spec.validate_tree()
+            if M.has_recurrent(cfg):
+                raise ValueError(
+                    f"{cfg.name}: tree speculation needs an attention-only "
+                    f"arch — recurrent mixers verify rows as causal "
+                    f"sequences, which has no valid tree layout "
+                    f"(DESIGN.md §11)")
         self.tok = ByteTokenizer()
         self.max_batch = max_batch
         self.max_new_cap = max_new_cap
@@ -222,8 +230,11 @@ class ServingEngine:
                 strategy = ("greedy" if w == 0 else
                             ("mixed" if self.spec.strategy == "greedy"
                              else self.spec.strategy))
+                # the w == 0 arm is plain greedy: there is no tree to build
+                # (validate_tree rejects tree+greedy), so drop the flag
                 spec = dataclasses.replace(spec, k=max(k, 1), w=max(w, 1),
-                                           strategy=strategy)
+                                           strategy=strategy,
+                                           tree=spec.tree and w > 0)
             self._gen_cache[key] = jax.jit(
                 lambda p, toks, eos, tbl: generate(p, self.cfg, spec, toks,
                                                    tbl, eos_id=eos))
@@ -267,6 +278,8 @@ class ServingEngine:
                 "tokens_per_call": float(np.asarray(stats["tokens"])[i]
                                          / max(1, np.asarray(
                                              stats["calls"])[i])),
+                "accept_hist": np.asarray(stats["accept_hist"])[i].tolist()
+                if "accept_hist" in stats else [],
                 "wall_time_s": dt,
             }
         return batch.requests
@@ -294,9 +307,11 @@ class ServingEngine:
             w_max = max(a[1] for a in self._arms)
             strategy = ("mixed" if spec.strategy == "greedy"
                         else spec.strategy)
+            # spec.tree rides through the replace: tree arms read the same
+            # (k, w) table as (width, depth) under path masking (§11)
             spec = dataclasses.replace(
                 spec, k=k_max, w=max(w_max, 1), strategy=strategy,
-                arms=self._arms).validate_arms()
+                arms=self._arms).validate_arms().validate_tree()
         self._cont_spec = spec
         # size the DecodeState to the queued workload, not the 512-token
         # worst case; the scheduler itself is left untouched (a later
@@ -398,6 +413,7 @@ class ServingEngine:
         buf = np.asarray(state.buf)
         calls_np = np.asarray(state.stats["calls"])
         tokens_np = np.asarray(state.stats["tokens"])
+        accept_hist_np = np.asarray(state.stats["accept_hist"])
         arm_pulls_np = (np.asarray(state.stats["arm_pulls"])
                         if self._arms else None)
         retired: List[Request] = []
@@ -412,6 +428,11 @@ class ServingEngine:
                 "new_tokens": int(blen[slot] - plen[slot]),
                 "model_calls": calls,
                 "tokens_per_call": float(tokens / max(1, calls)),
+                # this request's acceptance-length histogram: entry n =
+                # verify calls that committed exactly n tokens (0..w+1) —
+                # the paper's Fig. 4 ablation, per request (read BEFORE
+                # release zeroes the slot's stats rows)
+                "accept_hist": accept_hist_np[slot].tolist(),
                 # per-request admit->retire latency; deliberately NOT named
                 # wall_time_s (which in serve_all is the shared whole-batch
                 # generate time — a different quantity)

@@ -9,7 +9,7 @@ import hypothesis.strategies as st  # noqa: E402
 from hypothesis import given, settings  # noqa: E402
 
 from repro.core.drafters import context_ngram_draft
-from repro.core.verify import accept
+from repro.core.verify import accept, masked_acceptance
 
 pytestmark = pytest.mark.slow  # model-level suite; excluded from -m 'not slow' fast lane
 
@@ -86,6 +86,77 @@ def test_masked_accept_equals_submatrix(seed, k, w):
     d = accept(drafts[:, :ke, :we], greedy[:, :ke, :we + 1])
     assert int(m.winner[0]) == int(d.winner[0])
     assert n == int(d.n_commit[0])
+    np.testing.assert_array_equal(np.asarray(m.tokens[0, :n]),
+                                  np.asarray(d.tokens[0, :n]))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_masked_acceptance_degenerate_masks(seed, k, w):
+    """masked_acceptance under ANY mask combination — including the
+    degenerate corners its docstring promises: w_eff == 0 (pure greedy,
+    every n_acc zeroed), k_eff == 1 (row 0 the only candidate), an
+    all-False eq (bonus-only), and a row_mask that excludes everything but
+    row 0 (the all-0 tree path, eligible by construction)."""
+    rng = np.random.default_rng(seed)
+    eq = jnp.asarray(rng.integers(0, 2, (1, k, w)), bool)
+    ke = int(rng.integers(1, k + 1))
+    we = int(rng.integers(0, w + 1))
+    rm = rng.integers(0, 2, (1, k)).astype(bool)
+    rm[0, 0] = True                      # at least one eligible row, always
+    n_acc, n_rank = masked_acceptance(eq, k_eff=jnp.asarray([ke]),
+                                      w_eff=jnp.asarray([we]),
+                                      row_mask=jnp.asarray(rm))
+    n_acc, n_rank = np.asarray(n_acc[0]), np.asarray(n_rank[0])
+    # n_acc: depth-truncated prefix length, independent of eligibility
+    for i in range(k):
+        run = 0
+        for j in range(min(we, w)):
+            if not bool(eq[0, i, j]):
+                break
+            run += 1
+        assert n_acc[i] == run
+    # n_rank: -1 exactly on ineligible rows, n_acc elsewhere
+    for i in range(k):
+        eligible = (i < ke) and bool(rm[0, i])
+        assert n_rank[i] == (n_acc[i] if eligible else -1)
+    # a winner always exists and is eligible (row 0 guarantees >= 0)
+    wi = int(np.argmax(n_rank))
+    assert n_rank[wi] >= 0 and wi < ke and bool(rm[0, wi])
+    if we == 0:
+        assert (n_acc == 0).all()        # pure greedy: bonus token only
+    # degenerate eq: nothing accepted anywhere
+    z_acc, z_rank = masked_acceptance(jnp.zeros((1, k, w), bool),
+                                      k_eff=jnp.asarray([ke]),
+                                      w_eff=jnp.asarray([we]),
+                                      row_mask=jnp.asarray(rm))
+    assert int(np.asarray(z_acc).sum()) == 0
+    assert int(np.argmax(np.asarray(z_rank)[0])) < ke
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 4),
+       st.integers(1, 3))
+@settings(**SETTINGS)
+def test_tree_row_mask_accept_equals_subproblem(seed, width, depth, branch):
+    """The tree-arm contract (DESIGN.md §11): accepting the full lex-ordered
+    path list under ``row_mask = path_max_branch < width_b`` is EXACTLY
+    acceptance on the width_b sub-tree's own path list — the row_mask
+    rendering of the k_eff prefix property, for the non-prefix eligibility
+    pattern trees induce."""
+    from repro.core.tree import topology
+    rng = np.random.default_rng(seed)
+    topo = topology(width, depth, branch)
+    P = topo.num_paths
+    wb = int(rng.integers(1, width + 1))
+    sub = topo.path_max_branch < wb                       # (P,) eligibility
+    drafts = jnp.asarray(rng.integers(0, 3, (1, P, depth)), jnp.int32)
+    greedy = jnp.asarray(rng.integers(0, 3, (1, P, depth + 1)), jnp.int32)
+    m = accept(drafts, greedy, row_mask=jnp.asarray(sub[None]))
+    d = accept(drafts[:, sub, :], greedy[:, sub, :])
+    # eligibility preserves lex order, so winners map through the subset
+    assert int(m.winner[0]) == int(np.flatnonzero(sub)[int(d.winner[0])])
+    assert int(m.n_commit[0]) == int(d.n_commit[0])
+    n = int(m.n_commit[0])
     np.testing.assert_array_equal(np.asarray(m.tokens[0, :n]),
                                   np.asarray(d.tokens[0, :n]))
 

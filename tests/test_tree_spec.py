@@ -1,0 +1,409 @@
+"""Tree-structured speculation (DESIGN.md §11): topology invariants,
+lossless-vs-greedy across strategies/backends/KV layouts, masked tree-arm
+bit-parity with dedicated static runs, and the tree-mask kernel vs its
+XLA oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree as T
+from repro.core.ngram_tables import NGramTables, build_bigram, build_unigram
+from repro.core.spec_engine import (SpecConfig, generate, greedy_reference,
+                                    init_decode_state, spec_step)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+F32 = dict(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+
+
+def _tables(params, cfg, k_max=8, w_max=8):
+    fwd = jax.jit(lambda t: M.forward(params, cfg, tokens=t)[0][:, -1])
+    topk, chain = build_bigram(fwd, cfg.vocab_size, k_max=k_max, w_max=w_max,
+                               batch=cfg.vocab_size)
+    uni = build_unigram(params["embed"]["embedding"],
+                        params["embed"]["lm_head"], k_max=k_max)
+    return NGramTables(uni, topk, chain)
+
+
+# ---------------------------------------------------------------------------
+# topology: static-layout invariants (fast lane)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("wdb", [(1, 1, 1), (2, 3, 1), (3, 2, 2), (2, 5, 2),
+                                 (4, 4, 3), (3, 3, 5)])
+def test_topology_counts_and_order(wdb):
+    wd, dp, br = wdb
+    topo = T.topology(wd, dp, br)
+    d = T.effective_branch(dp, br)
+    assert topo.num_nodes == T.num_nodes(wd, dp, br)
+    assert topo.num_paths == T.num_paths(wd, dp, br) == wd ** d
+    # level-major enumeration, 1-based levels, branch fan-out then chains
+    lv = topo.level
+    assert (np.diff(lv) >= 0).all() and lv[0] == 1 and lv[-1] == dp
+    for lvl in range(1, dp + 1):
+        expect = wd ** min(lvl, d)
+        assert int((lv == lvl).sum()) == expect
+    # spine nodes replay drafter rows: exactly width of them per level
+    assert int(topo.spine.sum()) == wd * dp
+    # each path's inputs start at the root and walk parent->child
+    assert (topo.path_inputs[:, 0] == 0).all()
+    for p in range(topo.num_paths):
+        nodes = topo.path_nodes[p]
+        assert topo.level[nodes[0]] == 1 and topo.parent[nodes[0]] == -1
+        for j in range(1, dp):
+            assert topo.parent[nodes[j]] == nodes[j - 1]
+    # lex order of paths: path_max_branch of the all-0 path is 0
+    assert topo.path_max_branch[0] == 0
+    assert (topo.path_max_branch < wd).all()
+    # query positions: root at offset 0, node at its level
+    np.testing.assert_array_equal(topo.pos_off,
+                                  np.concatenate([[0], topo.level]))
+
+
+@pytest.mark.parametrize("wdb", [(2, 3, 2), (3, 2, 1), (2, 4, 4)])
+def test_topology_ancestor_mask(wdb):
+    """anc_mask makes each root-to-leaf path exactly a causal row: input i
+    at level l sees precisely its l+1 ancestors-or-self (root included),
+    and along any path the mask restricted to the path is lower-triangular."""
+    topo = T.topology(*wdb)
+    m = topo.anc_mask
+    assert m[0].sum() == 1 and m[0, 0]
+    for n in range(topo.num_nodes):
+        assert int(m[n + 1].sum()) == int(topo.level[n]) + 1
+    for p in range(topo.num_paths):
+        ins = topo.path_inputs[p]
+        sub = m[np.ix_(ins, ins)]
+        np.testing.assert_array_equal(sub, np.tril(np.ones_like(sub)))
+    # nothing sees a non-ancestor: siblings are mutually invisible
+    for n in range(topo.num_nodes):
+        s0 = int(topo.sibling0[n])
+        if s0 != n:
+            assert not m[n + 1, s0 + 1] and not m[s0 + 1, n + 1]
+
+
+def test_topology_rejects_degenerate():
+    for bad in [(0, 1, 1), (1, 0, 1), (1, 1, 0), (-1, 2, 2)]:
+        with pytest.raises(ValueError):
+            T.topology(*bad)
+
+
+def test_fill_tree_spine_and_dedup():
+    """Spine nodes replay the linear drafts verbatim (tree paths are a
+    superset of the linear rows); off-spine children of a spine parent skip
+    the candidate duplicating the spine continuation, so no branch level
+    verifies the same token twice under one parent."""
+    rng = np.random.default_rng(0)
+    V, kmax, wd, dp, br = 13, 5, 3, 3, 2
+    topo = T.topology(wd, dp, br)
+    # bigram table with DISTINCT candidates per row (as build_bigram yields)
+    big = np.stack([rng.permutation(V)[:kmax] for _ in range(V)])
+    tables = NGramTables(jnp.zeros((kmax,), jnp.int32),
+                         jnp.asarray(big, jnp.int32),
+                         jnp.zeros((V,), jnp.int32))
+    drafts = jnp.asarray(rng.integers(0, V, (2, wd, dp)), jnp.int32)
+    toks = np.asarray(T.fill_tree(topo, drafts, tables))       # (B, N)
+    for n in range(topo.num_nodes):
+        if topo.spine[n]:
+            np.testing.assert_array_equal(
+                toks[:, n],
+                np.asarray(drafts[:, topo.spine_row[n], topo.level[n] - 1]))
+    # children of any one parent are pairwise distinct tokens
+    for b in range(toks.shape[0]):
+        for n in range(topo.num_nodes):
+            sibs = [c for c in range(topo.num_nodes)
+                    if topo.parent[c] == n]
+            vals = [toks[b, c] for c in sibs]
+            assert len(vals) == len(set(vals)), (b, n, vals)
+
+
+def test_fill_tree_context_seeded_tails():
+    """With the committed buffer provided, the chain tail below a deviation
+    re-queries the buffer-local order-2 n-gram at its (grandparent, parent)
+    pair and copies what followed; pairs never seen in the buffer fall back
+    to the global bigram argmax, and spine nodes stay verbatim replays."""
+    rng = np.random.default_rng(1)
+    V, kmax, wd, dp, br = 13, 5, 2, 3, 2
+    topo = T.topology(wd, dp, br)
+    big = np.stack([rng.permutation(V)[:kmax] for _ in range(V)])
+    tables = NGramTables(jnp.zeros((kmax,), jnp.int32),
+                         jnp.asarray(big, jnp.int32),
+                         jnp.zeros((V,), jnp.int32))
+    drafts = jnp.asarray(rng.integers(0, V, (1, wd, dp)), jnp.int32)
+    base = np.asarray(T.fill_tree(topo, drafts, tables))
+    # find a level-2 deviation and its level-3 chain child
+    dev = next(n for n in range(topo.num_nodes)
+               if topo.level[n] == 2 and not topo.spine[n])
+    tail = next(n for n in range(topo.num_nodes)
+                if topo.parent[n] == dev)
+    gp, p = base[0, topo.parent[dev]], base[0, dev]
+    cont = (int(big[p][0]) + 1) % V          # any non-argmax continuation
+    # buffer whose only (gp, p) occurrence is followed by `cont`
+    buf = np.full((1, 16), (int(gp) + 1) % V, np.int32)
+    buf[0, 3], buf[0, 4], buf[0, 5] = gp, p, cont
+    seeded = np.asarray(T.fill_tree(
+        topo, drafts, tables, buf=jnp.asarray(buf),
+        buf_len=jnp.asarray([16], jnp.int32)))
+    assert seeded[0, tail] == cont
+    # same fill with a buffer that never saw the pair: bigram fallback
+    unseen = np.asarray(T.fill_tree(
+        topo, drafts, tables,
+        buf=jnp.asarray(np.full((1, 16), (int(gp) + 1) % V, np.int32)),
+        buf_len=jnp.asarray([16], jnp.int32)))
+    assert unseen[0, tail] == big[p][0]
+    np.testing.assert_array_equal(unseen, base)
+    # spine nodes are untouched by seeding
+    np.testing.assert_array_equal(seeded[:, topo.spine], base[:, topo.spine])
+    # an occurrence whose continuation is PAST buf_len must not be used
+    short = np.asarray(T.fill_tree(
+        topo, drafts, tables, buf=jnp.asarray(buf),
+        buf_len=jnp.asarray([5], jnp.int32)))    # pair at 3,4; cont at 5
+    assert short[0, tail] == big[p][0]
+
+
+def test_fill_tree_needs_wide_enough_tables():
+    topo = T.topology(4, 2, 2)
+    tables = NGramTables(jnp.zeros((2,), jnp.int32),
+                         jnp.zeros((7, 2), jnp.int32),
+                         jnp.zeros((7,), jnp.int32))
+    with pytest.raises(ValueError, match="k_max"):
+        T.fill_tree(topo, jnp.zeros((1, 4, 2), jnp.int32), tables)
+
+
+def test_validate_tree_config_errors():
+    with pytest.raises(ValueError):
+        SpecConfig(strategy="greedy", tree=True).validate_tree()
+    with pytest.raises(ValueError):
+        SpecConfig(k=2, w=0, tree=True).validate_tree()
+    with pytest.raises(ValueError):
+        SpecConfig(k=2, w=2, tree=True, tree_branch=0).validate_tree()
+    SpecConfig(k=2, w=2, tree=True).validate_tree()      # fine
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: tree mode is bit-lossless vs greedy (slow model-level suite)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["bigram", "unigram", "context",
+                                      "mixed"])
+def test_tree_generate_equals_greedy(tiny_dense, strategy):
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 2, 10, 24
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=3, w=4, q=1, strategy=strategy, max_new_tokens=N,
+                      tree=True, tree_branch=2)
+    buf, blen, stats = generate(params, cfg, spec, prompt, tables)
+    np.testing.assert_array_equal(np.asarray(buf[:, :P + N]),
+                                  np.asarray(ref))
+    assert (np.asarray(blen) == P + N).all()
+    # rank histogram is per-PATH in tree mode
+    assert stats["rank_hist"].shape[1] == T.num_paths(3, 4, 2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wdb", [(1, 1, 1), (2, 3, 1), (4, 2, 2), (2, 5, 3)])
+def test_tree_generate_shape_grid(tiny_dense, wdb):
+    """Degenerate corners: single node, chain-only (branch beats depth),
+    wide-shallow, branch > depth clamping — all lossless."""
+    cfg, params = tiny_dense
+    wd, dp, br = wdb
+    tables = _tables(params, cfg, k_max=max(8, wd))
+    B, P, N = 2, 6, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=wd, w=dp, strategy="mixed", max_new_tokens=N,
+                      tree=True, tree_branch=br)
+    buf, _, _ = generate(params, cfg, spec, prompt, tables)
+    np.testing.assert_array_equal(np.asarray(buf[:, :P + N]), np.asarray(ref))
+
+
+@pytest.mark.slow
+def test_tree_rejects_recurrent_arch(tiny_hybrid_cfg):
+    cfg = tiny_hybrid_cfg
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tables = _tables(params, cfg)
+    prompt = jnp.zeros((1, 4), jnp.int32)
+    spec = SpecConfig(k=2, w=2, strategy="mixed", max_new_tokens=4,
+                      tree=True)
+    with pytest.raises(ValueError, match="attention-only"):
+        generate(params, cfg, spec, prompt, tables)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: tree-mask kernel path == XLA, both == greedy (fast subset
+# runs in the backend-parity CI lane)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def parity_model():
+    cfg = ModelConfig(name="tree-parity", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=61,
+                      backend="xla", kernel_block_s=16, **F32).validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def parity_tables(parity_model):
+    cfg, params = parity_model
+    return _tables(params, cfg)
+
+
+def test_tree_generate_backend_parity(parity_model, parity_tables):
+    cfg, params = parity_model
+    B, P, N = 2, 10, 14
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        c = dataclasses.replace(cfg, backend=backend).validate()
+        spec = SpecConfig(k=3, w=3, strategy="mixed", max_new_tokens=N,
+                          backend=backend, tree=True, tree_branch=2)
+        buf, _, _ = generate(params, c, spec, prompt, parity_tables)
+        outs[backend] = np.asarray(buf[:, :P + N])
+    np.testing.assert_array_equal(outs["xla"], outs["pallas"])
+    np.testing.assert_array_equal(outs["pallas"], np.asarray(ref))
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_tree_kernel_mask_vs_ref(paged):
+    """The bifurcated verify kernel under an arbitrary ancestor mask (as a
+    lane-padded operand) matches the XLA oracle given the same mask — on
+    both the linear-cache and paged grids."""
+    from repro.kernels import ops
+    topo = T.topology(2, 3, 2)
+    KW1 = topo.num_nodes + 1                  # 11 — exercises lane padding
+    B, H, KV, hd, S = 2, 4, 2, 16, 32
+    rng = np.random.default_rng(3)
+    r = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    q = r(B, 1, KW1, H, hd)
+    kc, vc = r(B, S, KV, hd), r(B, S, KV, hd)
+    kt, vt = r(B, 1, KW1, KV, hd), r(B, 1, KW1, KV, hd)
+    cur = jnp.asarray([17, 9], jnp.int32)
+    tm = tuple(map(tuple, topo.anc_mask.tolist()))
+    want = ops.spec_attention_ref_op(q, kc, vc, kt, vt, cur, w1=KW1,
+                                     tail_mask=tm)
+    if paged:
+        ps = 16
+        pool_k = kc.reshape(B * (S // ps), ps, KV, hd)
+        pool_v = vc.reshape(B * (S // ps), ps, KV, hd)
+        pt = jnp.arange(B * (S // ps), dtype=jnp.int32).reshape(B, S // ps)
+        got = ops.paged_spec_attention_op(q, pool_k, pool_v, pt, kt, vt,
+                                          cur, w1=KW1, interpret=True,
+                                          tail_mask=tm)
+    else:
+        got = ops.spec_attention_op(q, kc, vc, kt, vt, cur, w1=KW1,
+                                    block_s=16, interpret=True, tail_mask=tm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# continuous serving + paged KV: admit/spec_step drive stays lossless
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [False, True])
+def test_tree_continuous_serving_lossless(parity_model, parity_tables,
+                                          paged):
+    from repro.serving import ServingEngine
+    cfg, params = parity_model
+    prompts = ["tree serving", "paged or not", "third request"]
+
+    def serve(tree):
+        spec = SpecConfig(k=3, w=3, strategy="mixed", max_new_tokens=10,
+                          tree=tree, tree_branch=2)
+        eng = ServingEngine(params, cfg, spec, tables=parity_tables,
+                            max_batch=2, buckets=(16,), max_new_cap=10,
+                            bucket_align=1, paged=paged)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=10)
+        done = eng.serve_continuous()
+        return {r.prompt: np.asarray(r.output_ids) for r in done}
+
+    lin, tr = serve(False), serve(True)
+    assert lin.keys() == tr.keys()
+    for p in lin:
+        np.testing.assert_array_equal(lin[p], tr[p], err_msg=p)
+
+
+@pytest.mark.slow
+def test_tree_continuous_reports_accept_hist(parity_model, parity_tables):
+    from repro.serving import ServingEngine
+    cfg, params = parity_model
+    spec = SpecConfig(k=2, w=3, strategy="mixed", max_new_tokens=8,
+                      tree=True, tree_branch=2)
+    eng = ServingEngine(params, cfg, spec, tables=parity_tables,
+                        max_batch=2, buckets=(16,), max_new_cap=8)
+    eng.submit("histogram", max_new_tokens=8)
+    (req,) = eng.serve_continuous()
+    hist = req.stats["accept_hist"]
+    assert len(hist) == spec.w + 2
+    assert sum(hist) == req.stats["model_calls"]
+    # the admission prefill commits the request's FIRST token outside any
+    # spec_step, so the histogram accounts for every token but that one
+    assert sum(i * c for i, c in enumerate(hist)) == \
+        req.stats["new_tokens"] - 1
+
+
+# ---------------------------------------------------------------------------
+# masked tree arms: bit-parity with a dedicated static run per arm
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("arm", [(1, 1), (2, 2), (3, 4)])
+def test_tree_masked_arm_equals_dedicated(tiny_dense, arm):
+    """A (width_b, depth_b) tree arm masked inside the (width_max,
+    depth_max) step must commit the SAME tokens in the SAME number of calls
+    as a dedicated static run of that arm (DESIGN.md §11)."""
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 2, 8, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(11), (B, P), 0,
+                                cfg.vocab_size)
+    kb, wb = arm
+
+    def drive(spec):
+        state = init_decode_state(params, cfg, spec, prompt)
+        trail = []
+        for _ in range(64):
+            if not bool(np.asarray(~state.done).any()):
+                break
+            state = spec_step(params, cfg, spec, state, tables)
+            trail.append(np.asarray(state.buf_len).copy())
+        else:
+            raise AssertionError("did not converge")
+        return np.asarray(state.buf[:, :P + N]), trail
+
+    # single-arm table: the bandit has no choice, every step is masked to it
+    masked = SpecConfig(k=3, w=4, strategy="mixed", max_new_tokens=N,
+                        tree=True, tree_branch=2, arms=((kb, wb),))
+    dedicated = SpecConfig(k=kb, w=wb, strategy="mixed", max_new_tokens=N,
+                           tree=True, tree_branch=2)
+    out_m, trail_m = drive(masked)
+    out_d, trail_d = drive(dedicated)
+    np.testing.assert_array_equal(out_m, out_d)
+    assert len(trail_m) == len(trail_d)
+    for a, b in zip(trail_m, trail_d):          # call-by-call, not just final
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_tree_adaptive_multi_arm_lossless(tiny_dense):
+    """Whatever (width, depth) arms the bandit explores, output == greedy."""
+    cfg, params = tiny_dense
+    tables = _tables(params, cfg)
+    B, P, N = 2, 8, 20
+    prompt = jax.random.randint(jax.random.PRNGKey(13), (B, P), 0,
+                                cfg.vocab_size)
+    ref = greedy_reference(params, cfg, prompt, N)
+    spec = SpecConfig(k=3, w=4, strategy="mixed", max_new_tokens=N,
+                      tree=True, tree_branch=2,
+                      arms=((1, 0), (2, 2), (3, 4)))
+    buf, _, stats = generate(params, cfg, spec, prompt, tables)
+    np.testing.assert_array_equal(np.asarray(buf[:, :P + N]),
+                                  np.asarray(ref))
+    assert int(np.asarray(stats["arm_pulls"]).sum()) > 0
