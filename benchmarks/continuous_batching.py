@@ -561,6 +561,103 @@ def run_tree(n: int = 12, max_new: int = 48, max_batch: int = 4,
     return res
 
 
+# ---------------------------------------------------------------------------
+# lossless speculative sampling (--temperature): BENCH_sampling.json
+# ---------------------------------------------------------------------------
+def run_sampling(n: int, rate_hz: float, max_batch: int, seed: int,
+                 temperature: float, top_p: float) -> Dict:
+    """Mixed greedy/sampled continuous serving (DESIGN.md §12): every even
+    submission decodes greedy, every odd one samples at ``--temperature`` /
+    ``--top-p``, all through ONE sampling-enabled spec_step.  Reports
+    tokens/call + acceptance histograms PER temperature CLASS (how much
+    speculation survives rejection sampling vs the greedy walk), and
+    asserts the greedy class is bit-identical to the same requests served
+    by a pure-greedy engine — the lossless contract under mixed serving.
+    Sampled requests pin per-ordinal seeds, so reruns replay exactly."""
+    ensure_dirs()
+    cfg, params = get_trained()
+    tables = get_tables(cfg, params, k_max=16, w_max=10)
+    spec = SpecConfig(k=8, w=8, strategy="mixed",
+                      max_new_tokens=max(MAX_NEW_CHOICES))
+
+    def make_engine(sampling: bool):
+        return ServingEngine(params, cfg, spec, tables=tables,
+                             max_batch=max_batch, buckets=BUCKETS,
+                             max_new_cap=max(MAX_NEW_CHOICES),
+                             sampling=sampling, seed=seed)
+
+    workload = make_workload(n, rate_hz, seed)
+
+    def serve(eng, classes: List[str]):
+        pending = list(enumerate(workload))
+        out: Dict[int, list] = {}
+        cls: Dict[str, Dict] = {c: {"requests": 0, "new_tokens": 0,
+                                    "model_calls": 0, "accept_hist": []}
+                                for c in set(classes)}
+        rid2ord: Dict[int, int] = {}
+        busy = 0.0
+        t0 = time.perf_counter()
+        while pending or eng.scheduler.pending() or eng.in_flight():
+            now = time.perf_counter() - t0
+            while pending and pending[0][1][2] <= now:
+                i, (text, mnt, _) = pending.pop(0)
+                temp = temperature if classes[i] == "sampled" else 0.0
+                rid = eng.submit(text, max_new_tokens=mnt,
+                                 temperature=temp,
+                                 top_p=top_p if temp > 0 else 1.0,
+                                 seed=10_000 + i).request_id
+                rid2ord[rid] = i
+            if not (eng.scheduler.pending() or eng.in_flight()):
+                time.sleep(min(0.001, max(pending[0][1][2] - now, 0.0)))
+                continue
+            tb = time.perf_counter()
+            retired = eng.step()
+            busy += time.perf_counter() - tb
+            for r in retired:
+                i = rid2ord[r.request_id]
+                out[i] = np.asarray(r.output_ids).tolist()
+                c = cls[classes[i]]
+                c["requests"] += 1
+                c["new_tokens"] += r.stats["new_tokens"]
+                c["model_calls"] += r.stats.get("model_calls", 0)
+                c["accept_hist"] = _add_hist(
+                    c["accept_hist"], r.stats.get("accept_hist", []))
+        for c in cls.values():
+            c["tokens_per_call"] = round(
+                c["new_tokens"] / max(c["model_calls"], 1), 3)
+        return out, cls, busy
+
+    classes = ["greedy" if i % 2 == 0 else "sampled" for i in range(n)]
+    eng = make_engine(True)
+    eng.submit("warmup", max_new_tokens=min(MAX_NEW_CHOICES),
+               temperature=temperature, top_p=top_p)
+    eng.serve_continuous()
+    out_mixed, cls_stats, busy = serve(eng, classes)
+
+    # lossless check: the greedy-class rows must be bit-identical to the
+    # same requests on a PINNED pure-greedy engine (whose step executable
+    # is byte-identical to the pre-sampling engine)
+    eng_g = make_engine(False)
+    eng_g.submit("warmup", max_new_tokens=min(MAX_NEW_CHOICES))
+    eng_g.serve_continuous()
+    out_greedy, _, _ = serve(eng_g, ["greedy"] * n)
+    lossless = all(out_mixed[i] == out_greedy[i]
+                   for i in range(n) if classes[i] == "greedy")
+    total = sum(c["new_tokens"] for c in cls_stats.values())
+    res = {"workload": {"n": n, "rate_hz": rate_hz, "seed": seed,
+                        "max_batch": max_batch, "buckets": list(BUCKETS),
+                        "temperature": temperature, "top_p": top_p,
+                        "spec": {"k": spec.k, "w": spec.w,
+                                 "strategy": spec.strategy}},
+           "classes": cls_stats,
+           "busy_wall_s": round(busy, 3),
+           "throughput_tok_s": round(total / max(busy, 1e-9), 2),
+           "greedy_class_lossless": bool(lossless)}
+    with open("BENCH_sampling.json", "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
 def run(n: int = 24, rate_hz: float = 4.0, max_batch: int = 4,
         seed: int = 0) -> Dict:
     ensure_dirs()
@@ -619,12 +716,37 @@ def main() -> None:
                          "(e.g. 2x2) vs the 1-device engine, assert bit "
                          "parity, report per-step collective bytes, and "
                          "write BENCH_sharded.json")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="serve a mixed greedy/sampled workload (half the "
+                         "requests sample at this temperature) through one "
+                         "sampling-enabled spec_step and write "
+                         "BENCH_sampling.json (per-class tokens/call + "
+                         "acceptance hists + greedy-class lossless "
+                         "assertion, DESIGN.md §12)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass for the sampled class of "
+                         "--temperature (1 = off)")
     ap.add_argument("--tree", action="store_true",
                     help="benchmark tree-structured speculation against "
                          "linear batched rows at matched verify-call cost "
                          "on the repetitive/branching mix and write "
                          "BENCH_tree.json (DESIGN.md §11)")
     args = ap.parse_args()
+    if args.temperature > 0:
+        res = run_sampling(args.n, args.rate, args.max_batch, args.seed,
+                           args.temperature, args.top_p)
+        print("class,requests,tokens_per_call,accept_hist")
+        for name in ("greedy", "sampled"):
+            c = res["classes"][name]
+            print(f"{name},{c['requests']},{c['tokens_per_call']},"
+                  f"\"{c['accept_hist']}\"")
+        print(f"throughput {res['throughput_tok_s']} tok/s | greedy class "
+              f"lossless: {res['greedy_class_lossless']}")
+        if not res["greedy_class_lossless"]:
+            raise SystemExit("greedy-class rows diverged from the pure-"
+                             "greedy engine: lossless contract broken")
+        print("wrote BENCH_sampling.json")
+        return
     if args.tree:
         res = run_tree(max(args.n, 4), max_batch=args.max_batch,
                        seed=args.seed)

@@ -39,6 +39,14 @@ to a dedicated static step of that arm, with zero recompiles across arm
 switches.  The bandit's (B, A) state rides in ``DecodeState.stats`` and is
 zeroed with the rest of the slot's stats on admission/release.
 
+Lossless speculative sampling (DESIGN.md §12): ``SpecConfig.sampling``
+compiles the sampled verification walk into the same step — per-slot
+``temperature``/``top_p``/``rng_key`` DecodeState leaves steer each row at
+runtime, 0-temperature rows stay bit-exact greedy, and temperature > 0 rows
+emit exactly the plain-sampling output distribution (the point-mass
+rejection rule realised by trajectory coupling — core/verify.py).  One
+compiled step therefore serves mixed greedy/sampled continuous batches.
+
 Tree mode (DESIGN.md §11): ``SpecConfig.tree`` swaps the k independent
 linear rows for ONE token tree per slot (core/tree.py): the first
 ``min(tree_branch, w)`` depths branch over the drafter's top-k candidates,
@@ -71,7 +79,7 @@ from .controller import (arm_slowdowns, choose_arms, init_arm_stats,
 from .drafters import (bigram_draft, context_ngram_draft, mixed_draft,
                        multi_depth_draft, unigram_draft)
 from .ngram_tables import NGramTables
-from .verify import accept
+from .verify import accept, per_row_keys, sample_predictions, sample_token
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +132,15 @@ class SpecConfig:
     # [1, k] x [0, w] box.  Attention-only archs, tables required.
     tree: bool = False
     tree_branch: int = 2
+    # Lossless speculative sampling (DESIGN.md §12): compile the sampled
+    # verification walk (core/verify.py::sample_predictions) into the step.
+    # Per-slot temperature/top_p/rng_key leaves in DecodeState then steer
+    # each row at RUNTIME — temperature == 0 rows stay bit-exact greedy, so
+    # one compiled step serves mixed greedy/sampled batches.  Off by
+    # default: the gumbel draw + top-p sort are real per-step work that
+    # pure-greedy serving should not pay, and the flag is static so the
+    # greedy-only executable is byte-identical to the pre-sampling engine.
+    sampling: bool = False
 
     def validate_tree(self) -> "SpecConfig":
         """Raise unless the tree knobs are a buildable topology."""
@@ -162,7 +179,8 @@ class SpecConfig:
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["buf", "buf_len", "prompt_len", "budget", "eos_id", "done",
-                 "active", "model", "stats"],
+                 "active", "model", "stats", "rng_key", "temperature",
+                 "top_p"],
     meta_fields=[])
 @dataclasses.dataclass
 class DecodeState:
@@ -173,6 +191,15 @@ class DecodeState:
     the row never stops on eos.  All leaves are fixed-shape so the state can
     thread through ``lax.while_loop`` and a jit-compiled ``spec_step``
     without recompilation as requests come and go.
+
+    Sampling leaves (DESIGN.md §12): ``rng_key`` is the slot's CARRY key —
+    a sampling-enabled step splits it once (vmapped over slots, inside the
+    jit, donated with the rest of the state), uses one half for this step's
+    gumbel draws and stores the other, so replaying the same admitted key
+    replays the same output.  ``temperature``/``top_p`` are per-slot runtime
+    data: 0-temperature rows take the bit-exact argmax path inside the SAME
+    compiled step.  All three reset on admit_slot/release_slot exactly like
+    the bandit stats.
     """
     buf: jnp.ndarray         # (B, L) int32 token buffer (prompt + output)
     buf_len: jnp.ndarray     # (B,) int32 committed length per row
@@ -183,6 +210,9 @@ class DecodeState:
     active: jnp.ndarray      # (B,) bool — slot currently occupied
     model: Dict[str, Any]    # models/cache.py state {"cur_len", "groups"}
     stats: Dict[str, jnp.ndarray]
+    rng_key: jnp.ndarray = None      # (B, 2) uint32 per-slot carry key
+    temperature: jnp.ndarray = None  # (B,) f32, <= 0 -> greedy row
+    top_p: jnp.ndarray = None        # (B,) f32 nucleus mass, 1 -> off
 
     @property
     def num_slots(self) -> int:
@@ -219,7 +249,17 @@ def _init_stats(spec: SpecConfig, B: int) -> Dict[str, jnp.ndarray]:
     st = {
         "calls": jnp.zeros((B,), jnp.int32),
         "tokens": jnp.zeros((B,), jnp.int32),
-        "accept_hist": jnp.zeros((B, spec.w + 2), jnp.int32),   # n_commit 0..w+1
+        # accept_hist bins n_commit per verify call into 0..w+1 (w+2 bins).
+        # INVARIANT: bin 0 is structurally zero and hist.sum() == calls —
+        # every step path commits >= 1 token per call (accept() returns
+        # n_commit = n_win + 1, the greedy body books its single token into
+        # bin 1, and eos/budget clamps only shrink n_commit of an ACTIVE
+        # row to >= 1).  Bin 0 is kept so the index IS the n_commit value
+        # (aggregators like benchmarks' _add_hist sum bins positionally),
+        # and as a canary: a nonzero bin 0 means a zero-commit call
+        # slipped through.  Rejection sampling makes n_commit == 1 (bonus
+        # only) the common case — bin 1, never bin 0.
+        "accept_hist": jnp.zeros((B, spec.w + 2), jnp.int32),
         "rank_hist": jnp.zeros((B, max(ranks, 1)), jnp.int32),
         "alloc_ctx": jnp.zeros((B, spec.k + 1), jnp.int32),     # n_ctx per call
         "accepted_ctx": jnp.zeros((B,), jnp.int32),             # drafted tokens
@@ -258,6 +298,13 @@ def _draft_adaptive(spec: SpecConfig, tables: Optional[NGramTables],
 # ---------------------------------------------------------------------------
 # state construction / slot admission
 # ---------------------------------------------------------------------------
+def _sampling_leaves(B: int) -> Dict[str, jnp.ndarray]:
+    """Greedy-default per-slot sampling leaves (the admit/release reset)."""
+    return dict(rng_key=jnp.zeros((B, 2), jnp.uint32),
+                temperature=jnp.zeros((B,), jnp.float32),
+                top_p=jnp.ones((B,), jnp.float32))
+
+
 def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
                        buf_size: int,
                        paged: Optional[PagedConfig] = None) -> DecodeState:
@@ -287,7 +334,8 @@ def empty_decode_state(cfg: ModelConfig, spec: SpecConfig, num_slots: int,
         done=jnp.ones((B,), bool),
         active=jnp.zeros((B,), bool),
         model=model,
-        stats=_init_stats(spec, B))
+        stats=_init_stats(spec, B),
+        **_sampling_leaves(B))
 
 
 def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
@@ -295,7 +343,10 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
                       max_new_tokens: Optional[jnp.ndarray] = None,
                       eos_id: Optional[jnp.ndarray] = None,
                       buf_size: Optional[int] = None,
-                      paged: Optional[PagedConfig] = None) -> DecodeState:
+                      paged: Optional[PagedConfig] = None,
+                      temperature: Optional[jnp.ndarray] = None,
+                      top_p: Optional[jnp.ndarray] = None,
+                      rng: Optional[jnp.ndarray] = None) -> DecodeState:
     """Prefill every row of ``prompt`` (B, P) into a fresh DecodeState.
 
     The static buffer is sized by spec.max_new_tokens (grown to cover
@@ -307,9 +358,23 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
     spec_step.  The default pool covers the worst case, so one-shot
     ``generate`` can never exhaust it — pool pressure is a serving concern
     (ServingEngine's page-reservation admission).
+
+    Sampling (requires ``spec.sampling`` — a silent greedy fallback would be
+    a correctness trap): ``temperature``/``top_p`` broadcast to per-row f32
+    controls, ``rng`` is either one base key (2,) — expanded per row via
+    fold_in(row) — or explicit per-row keys (B, 2).  The prompt's first free
+    token is already a sampling event: it draws from the row key's first
+    split, and the carry half seeds the step loop.
     """
     spec.validate_arms()
     spec.validate_tree()
+    if not spec.sampling and (temperature is not None or top_p is not None
+                              or rng is not None):
+        raise ValueError(
+            "temperature/top_p/rng need SpecConfig(sampling=True): the "
+            "sampled verification walk is compiled statically "
+            "(DESIGN.md §12); without it these knobs would silently "
+            "degrade to greedy")
     B, P = prompt.shape
     budget = (jnp.full((B,), spec.max_new_tokens, jnp.int32)
               if max_new_tokens is None
@@ -345,7 +410,24 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
     buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
 
     logits_p, model = M.prefill(params, cfg, model, tokens=prompt)
-    first = jnp.argmax(logits_p[:, -1], axis=-1).astype(jnp.int32)  # free token
+    leaves = _sampling_leaves(B)
+    if spec.sampling:
+        if temperature is not None:
+            leaves["temperature"] = jnp.broadcast_to(
+                jnp.asarray(temperature, jnp.float32), (B,))
+        if top_p is not None:
+            leaves["top_p"] = jnp.broadcast_to(
+                jnp.asarray(top_p, jnp.float32), (B,))
+        if rng is not None:
+            keys = per_row_keys(rng, B)
+        else:
+            keys = leaves["rng_key"]
+        nk = jax.vmap(jax.random.split)(keys)               # (B, 2, 2)
+        first = sample_token(logits_p[:, -1], nk[:, 0],
+                             leaves["temperature"], leaves["top_p"])
+        leaves["rng_key"] = nk[:, 1]
+    else:
+        first = jnp.argmax(logits_p[:, -1], axis=-1).astype(jnp.int32)
     buf = buf.at[:, P].set(first)
     stats = _init_stats(spec, B)
     stats["tokens"] = stats["tokens"] + 1
@@ -358,13 +440,15 @@ def init_decode_state(params, cfg: ModelConfig, spec: SpecConfig,
         done=(first == eos) & (eos >= 0),
         active=jnp.ones((B,), bool),
         model=model,
-        stats=stats)
+        stats=stats,
+        **leaves)
 
 
 def _admit_body(params, cfg: ModelConfig, state: DecodeState,
                 slot: jnp.ndarray, prompt: jnp.ndarray,
-                max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray
-                ) -> DecodeState:
+                max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray,
+                temperature: jnp.ndarray = 0.0, top_p: jnp.ndarray = 1.0,
+                rng_key: Optional[jnp.ndarray] = None) -> DecodeState:
     """Un-jitted body of ``admit_slot`` (re-jitted with explicit
     NamedShardings by ``make_sharded_slot_fns`` for mesh serving)."""
     P = prompt.shape[0]
@@ -374,7 +458,15 @@ def _admit_body(params, cfg: ModelConfig, state: DecodeState,
     logits, row_model = M.prefill(params, cfg, row_model,
                                   tokens=prompt[None].astype(jnp.int32),
                                   last_only=True)
-    first = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+    temp = jnp.asarray(temperature, jnp.float32)
+    topp = jnp.asarray(top_p, jnp.float32)
+    key = (jnp.zeros((2,), jnp.uint32) if rng_key is None
+           else jnp.asarray(rng_key, jnp.uint32))
+    # the request's first free token is its first sampling event: draw it
+    # from the admitted key's first split, carry the second into the slot
+    k_use, k_carry = jax.random.split(key)
+    first = sample_token(logits[:1, -1], k_use[None], temp[None],
+                         topp[None])[0]
     row = jnp.zeros((L,), jnp.int32)
     row = jax.lax.dynamic_update_slice(row, prompt.astype(jnp.int32), (0,))
     row = row.at[P].set(first)
@@ -398,21 +490,28 @@ def _admit_body(params, cfg: ModelConfig, state: DecodeState,
         done=state.done.at[slot].set((first == eos_id) & (eos_id >= 0)),
         active=state.active.at[slot].set(True),
         model=model,
-        stats=stats)
+        stats=stats,
+        rng_key=state.rng_key.at[slot].set(k_carry),
+        temperature=state.temperature.at[slot].set(temp),
+        top_p=state.top_p.at[slot].set(topp))
 
 
 @functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(2,))
 def admit_slot(params, cfg: ModelConfig, state: DecodeState,
                slot: jnp.ndarray, prompt: jnp.ndarray,
-               max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray
-               ) -> DecodeState:
+               max_new_tokens: jnp.ndarray, eos_id: jnp.ndarray,
+               temperature: jnp.ndarray = 0.0, top_p: jnp.ndarray = 1.0,
+               rng_key: Optional[jnp.ndarray] = None) -> DecodeState:
     """Prefill ``prompt`` (P,) into slot ``slot`` of a shared DecodeState.
 
     The freed slot's model cache is fully overwritten (cache.insert_slot), so
     nothing can leak from the slot's previous occupant.  Compiles once per
     prompt length P — the scheduler's length bucketing keeps that bounded.
-    ``slot``/``max_new_tokens``/``eos_id`` are traced, so heterogeneous
-    requests reuse the same executable.
+    ``slot``/``max_new_tokens``/``eos_id`` (and the per-request sampling
+    controls ``temperature``/``top_p``/``rng_key``) are traced, so
+    heterogeneous requests reuse the same executable.  The defaults admit a
+    greedy request; the prompt's first free token is sampled from the
+    admitted key (temperature 0 reduces to the argmax bit-exactly).
 
     Paged states prefill the row into a P-sized scratch linear cache, then
     allocate ceil(P / page_size) pool pages for the slot and scatter the
@@ -421,7 +520,7 @@ def admit_slot(params, cfg: ModelConfig, state: DecodeState,
     was skipped — free_slot_pages is idempotent.
     """
     return _admit_body(params, cfg, state, slot, prompt, max_new_tokens,
-                       eos_id)
+                       eos_id, temperature, top_p, rng_key)
 
 
 def _release_body(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
@@ -434,7 +533,10 @@ def _release_body(state: DecodeState, slot: jnp.ndarray) -> DecodeState:
         model=model,
         stats=C.zero_slot_stats(state.stats, slot),
         active=state.active.at[slot].set(False),
-        done=state.done.at[slot].set(True))
+        done=state.done.at[slot].set(True),
+        rng_key=state.rng_key.at[slot].set(jnp.zeros((2,), jnp.uint32)),
+        temperature=state.temperature.at[slot].set(0.0),
+        top_p=state.top_p.at[slot].set(1.0))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -471,10 +573,11 @@ def make_sharded_slot_fns(cfg: ModelConfig, spec: SpecConfig, *,
         in_shardings=(params_sh, state_sh, tables_sh),
         out_shardings=state_sh, donate_argnums=(1,))
     admit = jax.jit(
-        lambda params, state, slot, prompt, mnt, eos: _admit_body(
-            params, cfg, state, slot, prompt, mnt, eos),
+        lambda params, state, slot, prompt, mnt, eos, temp, topp, key:
+        _admit_body(params, cfg, state, slot, prompt, mnt, eos, temp, topp,
+                    key),
         in_shardings=(params_sh, state_sh, scalar_sh, scalar_sh, scalar_sh,
-                      scalar_sh),
+                      scalar_sh, scalar_sh, scalar_sh, scalar_sh),
         out_shardings=state_sh, donate_argnums=(1,))
     release = jax.jit(
         lambda state, slot: _release_body(state, slot),
@@ -515,6 +618,13 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
                                   s.model["cur_len"] + spec.w + 1, act))
     buf_c, len_c, done_c, state_c = s.buf, s.buf_len, s.done, s.model
     st = s.stats
+    if spec.sampling:
+        # one split per slot per step, inside the jit: half drives this
+        # step's per-level gumbel draws, half is carried (donated in place)
+        nk = jax.vmap(jax.random.split)(s.rng_key)          # (B, 2, 2)
+        use_keys, carry_keys = nk[:, 0], nk[:, 1]
+    else:
+        use_keys, carry_keys = None, s.rng_key
     last = jnp.take_along_axis(buf_c, (len_c - 1)[:, None], axis=1)[:, 0]
     if adaptive:
         # per-slot, per-step arm selection INSIDE the jit: UCB over the
@@ -542,10 +652,18 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
         logits, tails = M.verify(params, cfg, state_c, rows,
                                  pos_off=topo.pos_off,
                                  tail_mask=topo.anc_mask)
-        greedy_n = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        # path views: (B, P, w) draft tokens / (B, P, w+1) greedy preds
+        if spec.sampling:
+            # noise keyed per tree LEVEL (pos_off), so same-level nodes
+            # share it: alive nodes share prefixes -> logits -> samples,
+            # and the slot's sampled trajectory is well defined across the
+            # whole tree (duplicate-token siblings included)
+            preds_n = sample_predictions(logits, use_keys, s.temperature,
+                                         s.top_p, levels=topo.pos_off)[:, 0]
+        else:
+            preds_n = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        # path views: (B, P, w) draft tokens / (B, P, w+1) predictions
         drafts_pv = jnp.take(nodes, topo.path_nodes, axis=1)
-        greedy_pv = jnp.take(greedy_n, topo.path_inputs, axis=1)
+        greedy_pv = jnp.take(preds_n, topo.path_inputs, axis=1)
         row_mask = None
         if adaptive:
             # a (width_b, depth_b) arm keeps exactly the paths whose branch
@@ -559,7 +677,16 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
             [jnp.broadcast_to(last[:, None, None], (B, spec.k, 1)), drafts],
             axis=-1)                                            # (B,k,w+1)
         logits, tails = M.verify(params, cfg, state_c, rows)
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if spec.sampling:
+            # noise keyed per position level and SHARED across the k rows:
+            # rows alive at level j have identical prefixes -> identical
+            # logits -> identical samples, so acceptance walks one sampled
+            # trajectory and the bonus is its first divergent (= residual)
+            # token — the point-mass rejection rule, lossless for any k
+            greedy = sample_predictions(logits, use_keys, s.temperature,
+                                        s.top_p)
+        else:
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         acc = accept(drafts, greedy, k_eff=k_eff, w_eff=w_eff)
     active = s.active & (~done_c) & (len_c - s.prompt_len < s.budget)
     budget = jnp.maximum(s.prompt_len + s.budget - len_c, 0)
@@ -626,7 +753,8 @@ def _spec_body(params, cfg: ModelConfig, spec: SpecConfig,
         # included — the same tokens-per-call quantity AdaptiveKW tracks)
         st = update_arm_stats(st, arm, n_commit, active, spec.adapt_ema)
     return dataclasses.replace(s, buf=buf_n, buf_len=len_n, done=done_n,
-                               model=state_n, stats=st)
+                               model=state_n, stats=st,
+                               rng_key=carry_keys)
 
 
 def _greedy_body(params, cfg: ModelConfig, spec: SpecConfig,
@@ -646,7 +774,13 @@ def _greedy_body(params, cfg: ModelConfig, spec: SpecConfig,
     # key_positions only exposes p < cur_len, and admission overwrites).
     state_n = {**state_n,
                "cur_len": state_c["cur_len"] + active.astype(jnp.int32)}
-    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    if spec.sampling:
+        nk = jax.vmap(jax.random.split)(s.rng_key)          # (B, 2, 2)
+        nxt = sample_token(logits[:, -1], nk[:, 0], s.temperature, s.top_p)
+        carry_keys = nk[:, 1]
+    else:
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        carry_keys = s.rng_key
     slots = jnp.clip(len_c, 0, L - 1)
     buf_n = buf_c.at[jnp.arange(B), slots].set(
         jnp.where(active, nxt, buf_c[jnp.arange(B), slots]))
@@ -656,8 +790,15 @@ def _greedy_body(params, cfg: ModelConfig, spec: SpecConfig,
     st = dict(s.stats)
     st["calls"] = st["calls"] + active.astype(jnp.int32)
     st["tokens"] = st["tokens"] + active.astype(jnp.int32)
+    # a greedy-body call commits exactly one token, so it lands in bin 1 of
+    # the shared n_commit histogram — keeping "hist.sum() == calls" true for
+    # every strategy, and bin 0 structurally zero engine-wide (see
+    # _init_stats: every step path commits >= 1 token per call)
+    st["accept_hist"] = st["accept_hist"].at[:, 1].add(
+        active.astype(jnp.int32))
     return dataclasses.replace(s, buf=buf_n, buf_len=len_n, done=done_n,
-                               model=state_n, stats=st)
+                               model=state_n, stats=st,
+                               rng_key=carry_keys)
 
 
 def _step_body(params, cfg: ModelConfig, spec: SpecConfig,
@@ -691,18 +832,24 @@ def spec_step(params, cfg: ModelConfig, spec: SpecConfig, state: DecodeState,
 def generate(params, cfg: ModelConfig, spec: SpecConfig,
              prompt: jnp.ndarray, tables: Optional[NGramTables] = None,
              eos_id: Optional[jnp.ndarray] = None,
-             paged: Optional[PagedConfig] = None
+             paged: Optional[PagedConfig] = None,
+             temperature: Optional[jnp.ndarray] = None,
+             top_p: Optional[jnp.ndarray] = None,
+             rng: Optional[jnp.ndarray] = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Generate up to max_new_tokens for every row of ``prompt`` (B, P).
 
     ``eos_id``: optional per-row override of spec.eos_id (traced, so
     heterogeneous batches share one compilation).  ``paged`` runs the same
     loop over the paged KV layout (bit-identical outputs — the parity
-    tests' contract).  Returns (buf (B, L), buf_len (B,), stats).
-    jit-compatible end to end.
+    tests' contract).  ``temperature``/``top_p``/``rng`` (scalar or
+    per-row; requires ``spec.sampling``) run the lossless sampled
+    verification walk instead of greedy — see ``init_decode_state``.
+    Returns (buf (B, L), buf_len (B,), stats).  jit-compatible end to end.
     """
     state = init_decode_state(params, cfg, spec, prompt, eos_id=eos_id,
-                              paged=paged)
+                              paged=paged, temperature=temperature,
+                              top_p=top_p, rng=rng)
 
     def cond(s: DecodeState):
         return (~s.done).any() & ((s.buf_len - s.prompt_len) < s.budget).any()
@@ -736,4 +883,39 @@ def greedy_reference(params, cfg: ModelConfig, prompt: jnp.ndarray,
 
     for i in range(max_new_tokens):
         buf = step(buf, jnp.asarray(P + i))
+    return buf
+
+
+def sampling_reference(params, cfg: ModelConfig, prompt: jnp.ndarray,
+                       max_new_tokens: int, rng: jnp.ndarray,
+                       temperature, top_p=1.0) -> jnp.ndarray:
+    """Plain temperature/top-p decoding via full forward() only — the
+    sampled sibling of ``greedy_reference`` and the distributional-parity
+    oracle.
+
+    Per-row key chains mirror the engine's exactly (``per_row_keys`` then
+    one split per sampled token, first token included), and every draw goes
+    through the SAME primitive the spec path uses
+    (core/verify.py::sample_token on shape_logits-shaped distributions) —
+    so spec-vs-plain parity isolates the acceptance walk, not sampler
+    differences.  No eos/budget logic: fixed max_new_tokens per row.
+    """
+    B, P = prompt.shape
+    L = P + max_new_tokens
+    buf = jnp.zeros((B, L), jnp.int32)
+    buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
+    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    topp = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
+    keys = per_row_keys(jnp.asarray(rng, jnp.uint32), B)
+
+    @jax.jit
+    def step(buf, keys, cur):
+        logits, _ = M.forward(params, cfg, tokens=buf)
+        row_logits = logits[:, cur - 1]                       # (B, V)
+        nk = jax.vmap(jax.random.split)(keys)
+        nxt = sample_token(row_logits, nk[:, 0], temp, topp)
+        return buf.at[:, cur].set(nxt), nk[:, 1]
+
+    for i in range(max_new_tokens):
+        buf, keys = step(buf, keys, jnp.asarray(P + i))
     return buf

@@ -1,17 +1,38 @@
-"""Greedy acceptance logic for batched speculation (paper §4.1).
+"""Acceptance logic for batched speculation: greedy and sampled (paper §4.1).
 
 The verification model call already produced, for every draft row i, the
-model's greedy next-token prediction after each of its w+1 input tokens
-(``greedy[b, i, j]`` = argmax after consuming input j of row i, where input
-0 is the last committed token and inputs 1..w are the draft).
+model's next-token logits after each of its w+1 input tokens.  Under greedy
+decoding the per-position *prediction* is the argmax (``greedy[b, i, j]`` =
+argmax after consuming input j of row i, where input 0 is the last committed
+token and inputs 1..w are the draft).
 
 Row i accepts n_i = length of the longest prefix of its draft matching the
-model's own greedy predictions; the winner is the row with the largest n_i
+model's own predictions; the winner is the row with the largest n_i
 (ties -> lowest row index, which under the mixed strategy prioritises the
 context N-gram, matching the paper's ordering).  The winner always also
 emits one *bonus* token (the model's prediction after its last accepted
 token), so every call commits n* + 1 >= 1 tokens and the output equals plain
 greedy decoding token-for-token.
+
+Lossless sampled verification (DESIGN.md §12): our n-gram drafts are
+deterministic, so the speculative-sampling proposal is a POINT MASS and the
+textbook rejection rule "accept token x with prob min(1, p(x)/q(x)); on
+rejection resample from the renormalized residual (p - q)+" specialises to
+"accept x with prob p(x); on rejection draw the bonus from p with x zeroed".
+That per-event rule is realised here by *trajectory coupling*: instead of
+per-token coin flips, ``sample_predictions`` draws ONE target sample per
+(slot, tree level) from the temperature/top-p-shaped distribution via the
+gumbel-max trick with a key folded from (slot step key, level).  Because
+draft rows that are still alive at level j share their prefix (and therefore
+their logits), they receive the SAME sample — so a single well-defined
+sampled trajectory exists per slot, the longest-prefix walk in ``accept``
+commits exactly its matching prefix, and the bonus token IS the first
+trajectory token that diverged — i.e. a draw from the residual conditioned
+on rejection.  The committed tokens equal the trajectory prefix regardless
+of which row wins, which is what makes multi-row/tree verification lossless
+(independent per-row coins would double-count: with rows [a], [b],
+P(commit b) would be (1-p(a))·p(b) != p(b)).  With temperature == 0 the
+prediction reduces bit-exactly to the argmax path above.
 
 Per-slot arm masking (DESIGN.md §9, §11): ``masked_acceptance`` restricts
 slot b to its arm's sub-problem inside the shared compile-time shapes.  The
@@ -22,10 +43,11 @@ induces.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Acceptance(NamedTuple):
@@ -109,3 +131,127 @@ def accept(drafts: jnp.ndarray, greedy: jnp.ndarray,
     return Acceptance(tokens=tokens.astype(jnp.int32),
                       n_commit=(n_win + 1).astype(jnp.int32),
                       winner=winner, n_acc=n_acc)
+
+
+# ---------------------------------------------------------------------------
+# sampled verification (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _bcast_over(v: Union[float, jnp.ndarray], like: jnp.ndarray) -> jnp.ndarray:
+    """Align a scalar or (B,) control to the LEADING dims of ``like`` by
+    padding trailing singleton axes (numpy broadcasting aligns trailing)."""
+    v = jnp.asarray(v, jnp.float32)
+    return v.reshape(v.shape + (1,) * (like.ndim - v.ndim))
+
+
+def shape_logits(logits: jnp.ndarray,
+                 temperature: Union[float, jnp.ndarray],
+                 top_p: Union[float, jnp.ndarray, None] = None) -> jnp.ndarray:
+    """Shape raw logits into the target sampling distribution (f32).
+
+    The ONE shaping function shared by every sampling site — the spec-path
+    trajectory sampler, the plain-decode fallback, and the test oracle — so
+    "spec sampling == plain sampling" is a property of the acceptance walk,
+    never of two subtly different softmaxes.  Upcasts to float32 BEFORE the
+    temperature division (fp16 logits / small t overflows), then applies
+    nucleus (top-p) truncation: keep the smallest prefix of
+    descending-probability tokens whose mass reaches ``top_p``, -inf the
+    rest.  The top-1 token is always kept; ``top_p >= 1`` is a no-op.
+    ``temperature`` entries <= 0 are clamped to 1 purely to keep the
+    arithmetic finite — callers route those slots to argmax, never through
+    the shaped distribution.
+    """
+    lf = logits.astype(jnp.float32)
+    t = _bcast_over(temperature, lf)
+    scaled = lf / jnp.where(t > 0, t, 1.0)
+    if top_p is None:
+        return scaled
+    p = _bcast_over(top_p, lf)
+    probs = jax.nn.softmax(scaled, axis=-1)
+    srt = jnp.sort(probs, axis=-1)[..., ::-1]
+    excl = jnp.cumsum(srt, axis=-1) - srt          # mass strictly above rank
+    kept = excl < p                                 # always keeps rank 0
+    thresh = jnp.min(jnp.where(kept, srt, jnp.inf), axis=-1, keepdims=True)
+    keep = (probs >= thresh) | (p >= 1.0)
+    return jnp.where(keep, scaled, -jnp.inf)
+
+
+def residual_pmf(probs: jnp.ndarray, rejected: jnp.ndarray) -> jnp.ndarray:
+    """Renormalized residual after a point-mass rejection.
+
+    ``probs``: (..., V) target pmf; ``rejected``: (...,) int token ids.  For
+    a point-mass proposal q = δ_x the textbook residual (p - min(p, q))+ is
+    exactly p with x zeroed, and sampling it equals drawing t ~ p
+    conditioned on t != x — the identity that lets ``sample_predictions``
+    realise rejection sampling as trajectory coupling (no explicit residual
+    draw in the jitted path; this helper exists for the contract and its
+    property tests).  Callers guarantee probs[rejected] < 1.
+    """
+    p = probs.astype(jnp.float32)
+    hit = jax.nn.one_hot(rejected, p.shape[-1], dtype=p.dtype)
+    z = p * (1.0 - hit)
+    return z / jnp.sum(z, axis=-1, keepdims=True)
+
+
+def per_row_keys(rng: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """Expand one uint32 key (2,) to per-row keys (B, 2) via fold_in(row).
+
+    Already-(B, 2) key arrays pass through untouched, so callers can hand
+    either a base key or explicit per-request keys.
+    """
+    rng = jnp.asarray(rng, jnp.uint32)
+    if rng.ndim == 1:
+        return jax.vmap(lambda b: jax.random.fold_in(rng, b))(
+            jnp.arange(batch))
+    return rng
+
+
+def sample_predictions(logits: jnp.ndarray, rng: jnp.ndarray,
+                       temperature: jnp.ndarray, top_p: jnp.ndarray,
+                       levels: Optional[np.ndarray] = None) -> jnp.ndarray:
+    """Per-position target predictions for sampled verification.
+
+    logits: (B, K, W1, V) f32 verify logits; rng: (B, 2) uint32 per-slot
+    step keys; temperature/top_p: (B,) f32.  Returns (B, K, W1) int32
+    predictions that drop into ``accept`` exactly where the argmax
+    predictions go.
+
+    The gumbel noise is keyed per (slot, LEVEL) — ``levels`` maps each of
+    the W1 verify positions to its depth (linear mode: arange(W1); tree
+    mode: the topology's ``pos_off``, so same-level nodes share noise).
+    Rows/nodes alive at a level share their prefix, hence their logits,
+    hence — with shared noise — their sample: the slot has one sampled
+    trajectory and the acceptance walk commits its longest drafted prefix
+    plus the first divergent (= residual) token.  Slots with
+    temperature <= 0 return the argmax bit-exactly.
+    """
+    B, K, W1, V = logits.shape
+    lv = np.arange(W1) if levels is None else np.asarray(levels)
+    n_lv = int(lv.max()) + 1
+    pred_greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    shaped = shape_logits(logits, temperature, top_p)
+
+    def slot_noise(key: jnp.ndarray) -> jnp.ndarray:
+        keys = jax.vmap(lambda l: jax.random.fold_in(key, l))(
+            jnp.arange(n_lv))
+        return jax.vmap(
+            lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)
+
+    g = jax.vmap(slot_noise)(jnp.asarray(rng, jnp.uint32))   # (B, n_lv, V)
+    g = g[:, jnp.asarray(lv, jnp.int32)]                     # (B, W1, V)
+    sampled = jnp.argmax(shaped + g[:, None], axis=-1).astype(jnp.int32)
+    return jnp.where((temperature > 0)[:, None, None], sampled, pred_greedy)
+
+
+def sample_token(logits: jnp.ndarray, rng: jnp.ndarray,
+                 temperature: jnp.ndarray, top_p: jnp.ndarray) -> jnp.ndarray:
+    """Sample one next token per row: (B, V) logits -> (B,) int32.
+
+    The single-position case of ``sample_predictions`` (level 0) — used for
+    the plain-decode body, prefill first tokens, and admissions, so every
+    sampling event in the engine shares one primitive and one key schedule.
+    Rows with temperature <= 0 take the argmax bit-exactly.
+    """
+    return sample_predictions(logits[:, None, None, :], rng,
+                              jnp.asarray(temperature, jnp.float32),
+                              jnp.asarray(top_p, jnp.float32))[:, 0, 0]

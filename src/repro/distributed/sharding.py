@@ -295,9 +295,12 @@ def state_shardings(mesh: Mesh, state_shapes) -> Any:
 # full DecodeState rules (live sharded serving, DESIGN.md §10)
 # ----------------------------------------------------------------------------
 # per-slot row leaves of core.spec_engine.DecodeState: dim 0 is the slot
-# ("batch") axis; everything trailing is replicated
+# ("batch") axis; everything trailing is replicated.  The sampling leaves
+# (rng_key (B, 2), temperature/top_p (B,)) are ordinary per-slot rows: the
+# in-step key split/gumbel draws are row-local, so they shard with their
+# slot exactly like the bandit stats.
 _STATE_ROW_FIELDS = ("buf", "buf_len", "prompt_len", "budget", "eos_id",
-                     "done", "active")
+                     "done", "active", "rng_key", "temperature", "top_p")
 
 
 def _page_axes(mesh: Mesh, num_pages: int, kv_sharded: bool):

@@ -75,6 +75,18 @@ def main() -> None:
                          "via XLA_FLAGS when none are configured; outputs "
                          "stay bit-identical to unsharded serving "
                          "(DESIGN.md §10)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every submitted request "
+                         "(0 = greedy, bit-exact spec path; > 0 serves "
+                         "losslessly via rejection-verified speculative "
+                         "sampling inside the same spec_step, DESIGN.md "
+                         "§12)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass for --temperature > 0 (1 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine rng seed: request keys derive from it, so "
+                         "a rerun with the same seed replays the same "
+                         "sampled outputs")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "xla", "pallas"],
                     help="kernel-dispatch backend (kernels/dispatch.py): "
@@ -118,9 +130,12 @@ def main() -> None:
                         max_new_cap=args.max_new, adaptive=args.adaptive,
                         paged=args.paged,
                         num_pages=args.num_pages or None,
-                        page_size=args.page_size, mesh=mesh)
+                        page_size=args.page_size, mesh=mesh,
+                        sampling=args.temperature > 0 or None,
+                        seed=args.seed)
     for prompt, _ in make_prompts(args.task, args.n_prompts):
-        eng.submit(prompt, max_new_tokens=args.max_new)
+        eng.submit(prompt, max_new_tokens=args.max_new,
+                   temperature=args.temperature, top_p=args.top_p)
     served = eng.serve_continuous() if args.continuous else eng.serve_all()
     for r in served:
         if "error" in r.stats:

@@ -79,7 +79,9 @@ class ServingEngine:
                  paged: bool = False,
                  num_pages: Optional[int] = None,
                  page_size: int = 0,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 sampling: Optional[bool] = None,
+                 seed: int = 0):
         """``adaptive``: pick (k, w) online with the UCB controller
         (core/controller.py, beyond-paper) instead of a static setting —
         per whole batch under serve_all, per slot per step (shape-stable
@@ -111,7 +113,26 @@ class ServingEngine:
         Known seam: a mesh pins ``attn_verify`` to the sharded XLA
         flash-decode path — the Pallas verify kernel is single-device today
         (models/attention.py:_use_verify_kernel), so ``backend="pallas"``
-        is ignored (with a warning) under a mesh."""
+        is ignored (with a warning) under a mesh.
+
+        ``sampling``: compile the lossless sampled verification walk into
+        the continuous spec_step (DESIGN.md §12) so temperature > 0
+        requests serve speculatively.  None (default) auto-resolves when
+        the continuous state is built: sampling is enabled iff a sampled
+        request is queued (or spec.sampling was set).  Pass True to
+        pre-commit (e.g. when sampled traffic arrives after the first
+        step), False to pin the greedy-only executable — sampled requests
+        are then rejected at admission instead of silently served greedy.
+        ``seed`` is the engine's base rng key; request keys derive as
+        fold_in(seed_key, request_id) unless the request pins its own
+        ``seed`` — both replayable.  serve_all resolves sampling per batch
+        (static batching recompiles per batch shape anyway).  Mesh seam:
+        temperature-0 rows stay bit-exact vs unsharded serving, but
+        SAMPLED rows are bit-reproducible only per mesh configuration —
+        sharded matmul reductions perturb logits at the ~1e-6 level, which
+        argmax absorbs but a gumbel-argmax draw near its (dense) decision
+        boundary does not.  The output distribution is unchanged to the
+        same ~1e-6."""
         self.params = params
         self.cfg = cfg
         self.spec = spec or SpecConfig(strategy="greedy")
@@ -127,6 +148,11 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_new_cap = max_new_cap
         self.mesh = mesh
+        # sampling=None resolves lazily in _init_continuous (queued sampled
+        # request -> True); spec.sampling=True is an explicit pre-commit
+        self.sampling = (True if self.spec.sampling else sampling)
+        self.seed = seed
+        self._seed_key = jax.random.PRNGKey(seed)
         self._explicit_buckets = buckets is not None
         if mesh is not None:
             if (dispatch.use_pallas(cfg.backend)
@@ -215,16 +241,41 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: str, max_new_tokens: int = 64,
-               eos_id: int = -1) -> Request:
+               eos_id: int = -1, temperature: float = 0.0,
+               top_p: float = 1.0, seed: Optional[int] = None) -> Request:
+        """Queue a request.  ``temperature`` 0 decodes greedy (bit-exact
+        spec path); > 0 samples losslessly through the same spec_step
+        (DESIGN.md §12) with nucleus mass ``top_p``.  ``seed`` pins the
+        request's rng key (None: derived from the engine seed and
+        request_id — deterministic either way)."""
+        if temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0, got {temperature} (pass 0 for "
+                f"greedy decoding; negative values are always a bug)")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
         req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
-                      eos_id=eos_id)
+                      eos_id=eos_id, temperature=temperature, top_p=top_p,
+                      seed=seed)
         self.scheduler.submit(req)
         return req
 
-    def _gen_fn(self, max_new: int, kw=None):
-        key = (max_new, kw)
+    def _req_key(self, req: Request) -> jnp.ndarray:
+        """The request's (2,) uint32 rng key: its own seed when pinned,
+        else fold_in(engine seed key, request_id).  Pure function of
+        (engine seed, request) — resubmitting the same request with the
+        same seed replays the same sampled output, in any batch mix
+        (slots are independent, so a request's trajectory never depends
+        on its neighbours)."""
+        if req.seed is not None:
+            return jax.random.PRNGKey(req.seed)
+        return jax.random.fold_in(self._seed_key, req.request_id)
+
+    def _gen_fn(self, max_new: int, kw=None, sampled: bool = False):
+        key = (max_new, kw, sampled)
         if key not in self._gen_cache:
-            spec = dataclasses.replace(self.spec, max_new_tokens=max_new)
+            spec = dataclasses.replace(self.spec, max_new_tokens=max_new,
+                                       sampling=sampled)
             if kw is not None:                      # adaptive controller arm
                 k, w = kw
                 strategy = ("greedy" if w == 0 else
@@ -235,9 +286,20 @@ class ServingEngine:
                 spec = dataclasses.replace(spec, k=max(k, 1), w=max(w, 1),
                                            strategy=strategy,
                                            tree=spec.tree and w > 0)
-            self._gen_cache[key] = jax.jit(
-                lambda p, toks, eos, tbl: generate(p, self.cfg, spec, toks,
-                                                   tbl, eos_id=eos))
+            if sampled:
+                # per-row controls become runtime args; greedy rows inside
+                # the batch (temperature 0) stay bit-exact in the same trace
+                self._gen_cache[key] = jax.jit(
+                    lambda p, toks, eos, tbl, t, tp, ky: generate(
+                        p, self.cfg, spec, toks, tbl, eos_id=eos,
+                        temperature=t, top_p=tp, rng=ky))
+            else:
+                # greedy-only batches keep the pre-sampling signature (and
+                # therefore the exact executable the seed engine compiled)
+                self._gen_cache[key] = jax.jit(
+                    lambda p, toks, eos, tbl: generate(p, self.cfg, spec,
+                                                       toks, tbl,
+                                                       eos_id=eos))
         return self._gen_cache[key]
 
     def _effective_eos(self, req: Request) -> int:
@@ -248,18 +310,34 @@ class ServingEngine:
 
     def run_batch(self, batch: Batch) -> List[Request]:
         kw = self.controller.choose() if self.controller else None
-        fn = self._gen_fn(batch.max_new_tokens, kw)
+        # static batching resolves sampling per batch: a batch with any
+        # sampled request runs the sampled trace (its greedy rows stay
+        # bit-exact), an all-greedy batch keeps the greedy-only executable
+        sampled = (self.sampling is True
+                   or any(r.temperature > 0 for r in batch.requests))
+        fn = self._gen_fn(batch.max_new_tokens, kw, sampled)
         eos = jnp.asarray([self._effective_eos(r) for r in batch.requests],
                           jnp.int32)
         tokens = jnp.asarray(batch.tokens)
+        sample_args = ()
+        if sampled:
+            sample_args = (
+                jnp.asarray([r.temperature for r in batch.requests],
+                            jnp.float32),
+                jnp.asarray([r.top_p for r in batch.requests], jnp.float32),
+                jnp.stack([self._req_key(r) for r in batch.requests]))
         if self.mesh is not None:
             tokens = jax.device_put(
                 tokens, shd.batch_sharding(self.mesh, tokens.shape))
             eos = jax.device_put(eos, shd.batch_sharding(self.mesh,
                                                          eos.shape))
+            sample_args = tuple(
+                jax.device_put(a, shd.batch_sharding(self.mesh, a.shape))
+                for a in sample_args)
         t0 = time.perf_counter()
         with self._act():
-            buf, blen, stats = fn(self.params, tokens, eos, self.tables)
+            buf, blen, stats = fn(self.params, tokens, eos, self.tables,
+                                  *sample_args)
         buf.block_until_ready()
         dt = time.perf_counter() - t0
         if self.controller:
@@ -312,6 +390,17 @@ class ServingEngine:
             spec = dataclasses.replace(
                 spec, k=k_max, w=max(w_max, 1), strategy=strategy,
                 arms=self._arms).validate_arms().validate_tree()
+        # resolve the static sampling flag ONCE, at state build time:
+        # sampling=None enables the sampled walk iff a sampled request is
+        # already queued.  The flag is compile-time (DESIGN.md §12), so a
+        # sampled request reaching a greedy-only compiled step is rejected
+        # at admission (_admit_queued) rather than recompiling the step or
+        # silently serving it greedy.
+        if self.sampling is None:
+            self.sampling = any(r.temperature > 0
+                                for r in self.scheduler.queued_requests())
+        if self.sampling and not spec.sampling:
+            spec = dataclasses.replace(spec, sampling=True)
         self._cont_spec = spec
         # size the DecodeState to the queued workload, not the 512-token
         # worst case; the scheduler itself is left untouched (a later
@@ -386,15 +475,18 @@ class ServingEngine:
                              self.tables)
 
     def _run_admit(self, state: DecodeState, slot: int, toks,
-                   mnt: int, eos: int) -> DecodeState:
+                   mnt: int, eos: int, req: Request) -> DecodeState:
+        temp = jnp.float32(req.temperature)
+        topp = jnp.float32(req.top_p)
+        key = self._req_key(req)
         with self._act():
             if self._admit_jit is not None:
                 return self._admit_jit(self.params, state, jnp.int32(slot),
                                        jnp.asarray(toks), jnp.int32(mnt),
-                                       jnp.int32(eos))
+                                       jnp.int32(eos), temp, topp, key)
             return admit_slot(self.params, self.cfg, state, jnp.int32(slot),
                               jnp.asarray(toks), jnp.int32(mnt),
-                              jnp.int32(eos))
+                              jnp.int32(eos), temp, topp, key)
 
     def _run_release(self, state: DecodeState, slot: int) -> DecodeState:
         with self._act():
@@ -501,6 +593,20 @@ class ServingEngine:
                     f"{self._cont_prompt_cap} (pass buckets= / use paged "
                     f"mode to admit longer prompts)"))
                 continue
+            if req.temperature > 0 and not self._cont_spec.sampling:
+                # the step was compiled greedy-only (sampling=False was
+                # pinned, or the state was built before sampled traffic
+                # arrived) — serving this request greedy would silently
+                # break its output distribution, so reject loudly
+                self.scheduler.pop_next()
+                rejected.append(self._reject(
+                    req,
+                    f"temperature={req.temperature} needs a "
+                    f"sampling-enabled step, but the continuous spec_step "
+                    f"was compiled greedy-only (construct the engine with "
+                    f"sampling=True, or queue sampled requests before the "
+                    f"first step)"))
+                continue
             mnt = min(req.max_new_tokens, self.max_new_cap)
             if self.paged:
                 pages = self._slot_pages(toks.shape[0], mnt)
@@ -530,7 +636,7 @@ class ServingEngine:
                     f"max_new_cap={self.max_new_cap}; clamping (raise "
                     f"max_new_cap to honour larger budgets)")
             state = self._run_admit(state, slot, toks, mnt,
-                                    self._effective_eos(req))
+                                    self._effective_eos(req), req)
             self._slots.assign(slot, req)
             req.stats = {"admit_t": time.perf_counter()}
             i += 1

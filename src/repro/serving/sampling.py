@@ -1,11 +1,23 @@
-"""Sampling policies.  The paper's method verifies *greedy* continuations
-(§Limitations: non-greedy speculative sampling is future work), so the spec
-path is greedy-only; temperature sampling is provided for the plain path.
+"""Sampling policies shared by the plain decode path and callers that want
+one-off draws from a logits row.
+
+Historical note: the paper's method verifies *greedy* continuations
+(§Limitations defers non-greedy speculative sampling), and this module used
+to declare the spec path greedy-only.  That limitation is closed: the
+engine now serves temperature/top-p requests LOSSLESSLY through the same
+jitted spec_step via rejection-verified speculative sampling
+(core/verify.py, DESIGN.md §12) — submit with ``temperature > 0`` on
+``ServingEngine.submit`` or pass ``--temperature`` to ``launch/serve.py``.
+The helpers here are the plain (non-speculative) primitives; they shape
+logits with the SAME ``core.verify.shape_logits`` the spec path uses, so
+the two paths draw from identical distributions by construction.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from ..core.verify import shape_logits
 
 
 def greedy(logits: jnp.ndarray) -> jnp.ndarray:
@@ -13,8 +25,24 @@ def greedy(logits: jnp.ndarray) -> jnp.ndarray:
 
 
 def temperature_sample(rng, logits: jnp.ndarray,
-                       temperature: float = 1.0) -> jnp.ndarray:
-    if temperature <= 0.0:
+                       temperature: float = 1.0,
+                       top_p: float = 1.0) -> jnp.ndarray:
+    """Sample token ids from ``logits`` (..., V) at ``temperature`` with
+    optional nucleus (top-p) truncation.
+
+    ``temperature == 0`` is explicit greedy; NEGATIVE temperature raises —
+    it is always a caller bug (e.g. a sign error in a schedule) and
+    silently degrading it to greedy hid exactly that class of bug.  Logits
+    are upcast to float32 before scaling and the categorical draw
+    (shape_logits): dividing fp16/bf16 logits by a small temperature
+    overflows half precision and quietly skews the distribution.
+    """
+    if temperature < 0.0:
+        raise ValueError(
+            f"temperature must be >= 0, got {temperature} (pass 0 for "
+            f"greedy; a negative value is always a bug)")
+    if temperature == 0.0:
         return greedy(logits)
-    return jax.random.categorical(rng, logits / temperature,
-                                  axis=-1).astype(jnp.int32)
+    shaped = shape_logits(logits, temperature,
+                          None if top_p >= 1.0 else top_p)
+    return jax.random.categorical(rng, shaped, axis=-1).astype(jnp.int32)

@@ -28,6 +28,13 @@ class Request:
     prompt: str
     max_new_tokens: int = 64
     eos_id: int = -1             # -1: never stop on eos
+    # sampling controls (DESIGN.md §12): temperature 0 = greedy (bit-exact
+    # spec path); > 0 samples losslessly through the same spec_step.
+    # ``seed`` pins the request's rng key; None derives a deterministic key
+    # from the engine seed and request_id (replayable either way).
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: Optional[int] = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_counter))
     # filled on completion:
     output: Optional[str] = None
@@ -143,6 +150,12 @@ class Scheduler:
 
     def pending(self) -> int:
         return len(self._queue)
+
+    def queued_requests(self) -> List[Request]:
+        """Snapshot of queued requests in FIFO order (no pop) — the engine
+        inspects it at continuous-state build time to decide whether the
+        step must compile the sampled verification walk."""
+        return [r for r, _ in self._queue]
 
 
 class SlotMap:

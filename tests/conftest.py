@@ -18,6 +18,22 @@ def pytest_configure(config):
         "inner-loop fast lane (tier-1 verification still runs everything)")
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _drop_jit_caches_per_module():
+    """Drop jax's compiled-executable caches when a test module finishes.
+
+    Tier-1 runs the whole suite in ONE process and every module compiles
+    its own model configs, so the process-global executable cache only
+    grows — past a few hundred retained executables XLA:CPU's compiler has
+    been observed to segfault mid-compile (deep in backend_compile, late
+    in the run).  Cross-module cache reuse is ~nil (each module names its
+    own cfg precisely so it gets a fresh cache), so clearing at module
+    teardown bounds the growth without re-compiling anything a module
+    still needs."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(autouse=True)
 def _act_sharding_hygiene():
     """No test may leak an installed activation-sharder mesh into the next

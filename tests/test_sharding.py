@@ -124,6 +124,14 @@ def test_decode_state_pspec_serving_leaves():
     assert tuple(shd.decode_state_pspec(
         mesh, _dpath("stats", "accept_hist"),
         _Leaf((4, 6)))) == ("data", None)
+    # sampling leaves (DESIGN.md §12) are ordinary per-slot rows: the
+    # rng key's trailing (2,) stays replicated, the controls slot-shard
+    assert tuple(shd.decode_state_pspec(mesh, _dpath("rng_key"),
+                                        _Leaf((4, 2)))) == ("data", None)
+    assert tuple(shd.decode_state_pspec(mesh, _dpath("temperature"),
+                                        _Leaf((4,)))) == ("data",)
+    assert tuple(shd.decode_state_pspec(mesh, _dpath("top_p"),
+                                        _Leaf((4,)))) == ("data",)
     # odd slot count -> replicated, not an error
     assert tuple(shd.decode_state_pspec(mesh, _dpath("buf_len"),
                                         _Leaf((3,)))) == (None,)
@@ -174,12 +182,16 @@ def test_decode_state_shardings_walks_real_state_paths():
         model={"cur_len": jnp.zeros((B,), jnp.int32),
                "groups": {"p0": {"k": jnp.zeros((1, B, L, 2, 4)),
                                  "v": jnp.zeros((1, B, L, 2, 4))}}},
-        stats={"calls": jnp.zeros((B,), jnp.int32)})
+        stats={"calls": jnp.zeros((B,), jnp.int32)},
+        rng_key=jnp.zeros((B, 2), jnp.uint32),
+        temperature=jnp.zeros((B,), jnp.float32),
+        top_p=jnp.ones((B,), jnp.float32))
     flat = jax.tree_util.tree_flatten_with_path(state)[0]
     names = {"/".join(shd._path_names(p)) for p, _ in flat}
     assert "buf" in names
     assert "model/groups/p0/k" in names
     assert "stats/calls" in names
+    assert "rng_key" in names and "temperature" in names
 
 
 def test_act_sharding_activated_scoped_and_exception_safe():
