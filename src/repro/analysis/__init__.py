@@ -1,0 +1,75 @@
+"""repro-lint: static enforcement of the engine's lossless-speculation
+contracts (DESIGN.md §13).
+
+Two levels:
+
+  - **Level 1 (jaxpr)** traces the real step/admit/release bodies on
+    abstract states from a registry of representative serving configs and
+    checks donation soundness, sharding coverage, trace-signature
+    stability, and jitted-body host syncs.
+  - **Level 2 (AST)** lints ``src/repro`` for repo-specific source rules:
+    pallas-scope, tracer-branch, hash-constants, global-state,
+    time-in-jit, plus the serving-loop host-sync inventory.
+
+CLI: ``python -m repro.analysis [--strict] [--level {1,2}]
+[--baseline PATH] [--syncmap PATH] [--json]``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Tuple
+
+from .findings import Baseline, Finding, apply_waivers, scan_waivers
+
+PACKAGE_DIR = os.path.dirname(os.path.abspath(__file__))
+SRC_ROOT = os.path.dirname(PACKAGE_DIR)          # .../src/repro
+DEFAULT_BASELINE = os.path.join(PACKAGE_DIR, "baseline.json")
+
+RULES: Dict[str, str] = {
+    # level 1 (jaxpr)
+    "donation": "donated DecodeState leaves alias outputs; no shared "
+                "buffers between leaves",
+    "sharding-coverage": "every DecodeState leaf has a strict "
+                         "decode_state_pspec rule on every registry mesh",
+    "trace-signature": "state signature is a fixed point of "
+                       "step/admit/release (no per-iteration retrace)",
+    "host-sync": "no host syncs in jitted bodies or un-waived syncs in "
+                 "the serving critical path",
+    # level 2 (AST)
+    "pallas-scope": "pallas_call only inside kernels/",
+    "tracer-branch": "no Python branching on jnp-derived values in core/",
+    "hash-constants": "hash constants only from kernels/hashing",
+    "global-state": "no module-level env/mesh mutation; install needs an "
+                    "uninstall/activated pairing",
+    "time-in-jit": "no wall-clock / host-RNG calls in jitted bodies",
+}
+
+
+def run_all(level: Optional[int] = None,
+            src_root: str = SRC_ROOT) -> Tuple[List[Finding], List[Dict]]:
+    """Run the requested level(s); returns (findings, host-sync inventory).
+
+    Level 2 is pure AST work and imports nothing from the engine; Level 1
+    imports jax and traces the registry, so it is lazily imported here to
+    keep ``--level 2`` runnable in seconds anywhere.
+    """
+    findings: List[Finding] = []
+    inventory: List[Dict] = []
+    if level in (None, 2):
+        from .ast_rules import run_level2
+        got, inventory = run_level2(src_root)
+        findings += got
+    if level in (None, 1):
+        from .jaxpr_rules import run_level1
+        lvl1 = run_level1()
+        findings += lvl1
+        inventory += [{"file": f.file, "line": f.line, "method": "<jaxpr>",
+                       "call": f.context, "kind": "jitted-body sync",
+                       "code": f.message, "waived": f.waived,
+                       "reason": f.waive_reason}
+                      for f in lvl1 if f.rule == "host-sync"]
+    return findings, inventory
+
+
+__all__ = ["Baseline", "Finding", "RULES", "DEFAULT_BASELINE", "SRC_ROOT",
+           "apply_waivers", "scan_waivers", "run_all"]

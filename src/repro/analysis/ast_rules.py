@@ -1,0 +1,447 @@
+"""Level-2 (AST) lint rules over ``src/repro`` — repo-specific invariants.
+
+Each rule mechanizes a contract DESIGN.md states in prose, with the PR
+whose bug class motivated it:
+
+  - ``pallas-scope``   — ``pallas_call`` only inside ``kernels/``: the
+    dispatch layer (DESIGN.md §7) is the single seam where backend choice
+    lives; a stray kernel call elsewhere bypasses the xla/pallas parity
+    contract and the mesh seam (a pallas_call is opaque to the SPMD
+    partitioner).
+  - ``tracer-branch``  — no Python ``if``/``while`` on jnp-derived values
+    in ``core/``: the engine bodies are jitted, so a host branch on a
+    tracer either crashes late (ConcretizationTypeError) or silently
+    splits the one-trace contract via recompiles.
+  - ``hash-constants`` — the continuation-hash constants live ONLY in
+    ``kernels/hashing.py``; a re-derived constant elsewhere silently
+    breaks drafter/kernel/oracle bit-agreement (the pre-PR-2 state).
+  - ``global-state``   — no module-level env-var / global-mesh mutation,
+    and every ``act_sharding.install`` call needs an ``uninstall`` /
+    ``activated`` pairing in the same module (PR 5: dryrun clobbered
+    XLA_FLAGS at import; an installed mesh leaked across engines and
+    pinned attn_verify off the Pallas path).
+  - ``time-in-jit``    — no wall-clock / host-RNG calls inside jitted
+    bodies (decorated with ``jax.jit`` or following the ``*_body`` naming
+    idiom): they execute once at trace time and bake a constant into the
+    executable.
+  - ``host-sync`` (AST half) — every device->host readback in the
+    continuous-serving critical path must carry an inline waiver stating
+    why it cannot be deferred; the resulting inventory is the starting
+    map for the ROADMAP's async-serving item (jaxpr half:
+    jaxpr_rules.check_host_sync).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding, apply_waivers, scan_waivers
+
+# repro-lint: allow(hash-constants): the linter must name the constants it hunts
+HASH_CONSTANTS = {2654435761, 0x9E3779B9}
+HASH_NAMES = {"HASH_MULT", "HASH_MIX"}
+# jax namespaces whose call results are (potential) tracers
+_TRACED_ROOTS = {"jnp"}
+_TRACED_JAX_ATTRS = {"lax", "nn", "random", "numpy"}
+_CLOCK_CALLS = {("time", "time"), ("time", "perf_counter"),
+                ("time", "monotonic"), ("time", "process_time"),
+                ("datetime", "now")}
+# the continuous-serving decode critical path (serving/engine.py):
+# everything called between two spec_step dispatches
+CRITICAL_PATH_METHODS = {"step", "serve_continuous", "_retire_finished",
+                         "_admit_queued", "_run_step", "_run_admit",
+                         "_run_release"}
+
+
+def _src_line(lines: Sequence[str], lineno: int) -> str:
+    return lines[lineno - 1].strip() if 0 < lineno <= len(lines) else ""
+
+
+def _mk(rule: str, relpath: str, node: ast.AST, lines: Sequence[str],
+        message: str, hint: str) -> Finding:
+    line = getattr(node, "lineno", 0)
+    return Finding(rule=rule, file=relpath, line=line, message=message,
+                   hint=hint, context=_src_line(lines, line))
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name expression ('' if not one)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# pallas-scope
+# ---------------------------------------------------------------------------
+def pallas_scope_findings(relpath: str, source: str,
+                          tree: ast.Module) -> List[Finding]:
+    if relpath.startswith("kernels/") or relpath.startswith("src/repro/kernels/"):
+        return []
+    lines = source.splitlines()
+    out = []
+    for node in ast.walk(tree):
+        name = ""
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call":
+            name = _attr_chain(node)
+        elif isinstance(node, ast.Name) and node.id == "pallas_call":
+            name = node.id
+        if name:
+            out.append(_mk(
+                "pallas-scope", relpath, node, lines,
+                f"{name!r} outside kernels/ — kernel invocation bypasses "
+                f"the dispatch layer (backend parity + mesh seam)",
+                "route the call through kernels/dispatch.py (or move the "
+                "kernel into kernels/)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tracer-branch
+# ---------------------------------------------------------------------------
+def _is_traced_expr(node: ast.AST, traced: Set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in traced
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        root = chain.split(".")[0] if chain else ""
+        if root in _TRACED_ROOTS:
+            return True
+        if root == "jax" and len(chain.split(".")) > 1 \
+                and chain.split(".")[1] in _TRACED_JAX_ATTRS:
+            return True
+        return False
+    if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare, ast.UnaryOp,
+                         ast.IfExp, ast.Subscript)):
+        return any(_is_traced_expr(c, traced) for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+    return False
+
+
+def tracer_branch_findings(relpath: str, source: str,
+                           tree: ast.Module) -> List[Finding]:
+    if not (relpath.startswith("core/")
+            or relpath.startswith("src/repro/core/")):
+        return []
+    lines = source.splitlines()
+    out: List[Finding] = []
+
+    def scan_fn(fn: ast.AST) -> None:
+        traced: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) \
+                    and _is_traced_expr(node.value, traced):
+                for tgt in node.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            traced.add(n.id)
+            elif isinstance(node, ast.AugAssign) \
+                    and _is_traced_expr(node.value, traced) \
+                    and isinstance(node.target, ast.Name):
+                traced.add(node.target.id)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)) \
+                    and _is_traced_expr(node.test, traced):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                out.append(_mk(
+                    "tracer-branch", relpath, node, lines,
+                    f"Python `{kind}` on a jnp-derived value inside core/ "
+                    f"— a host branch on a tracer crashes at trace time or "
+                    f"splits the one-trace contract",
+                    "use jnp.where / lax.cond / lax.select (runtime data "
+                    "must steer VALUES, not Python control flow)"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_fn(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# hash-constants
+# ---------------------------------------------------------------------------
+def hash_constant_findings(relpath: str, source: str,
+                           tree: ast.Module) -> List[Finding]:
+    if relpath.endswith("kernels/hashing.py"):
+        return []
+    lines = source.splitlines()
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool) \
+                and node.value in HASH_CONSTANTS:
+            out.append(_mk(
+                "hash-constants", relpath, node, lines,
+                f"continuation-hash constant {node.value} re-derived "
+                f"outside kernels/hashing.py — drafter/kernel/oracle "
+                f"bit-agreement now rests on a copy staying in sync",
+                "import HASH_MULT/HASH_MIX/hash_step from "
+                "repro.kernels.hashing instead"))
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id in HASH_NAMES:
+                    out.append(_mk(
+                        "hash-constants", relpath, node, lines,
+                        f"redefinition of {tgt.id} outside "
+                        f"kernels/hashing.py",
+                        "import it from repro.kernels.hashing"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# global-state
+# ---------------------------------------------------------------------------
+def _is_main_guard(node: ast.AST) -> bool:
+    return (isinstance(node, ast.If)
+            and isinstance(node.test, ast.Compare)
+            and isinstance(node.test.left, ast.Name)
+            and node.test.left.id == "__name__")
+
+
+def _walk_no_defs(node: ast.AST):
+    """Walk a statement WITHOUT descending into function/class bodies —
+    code inside a def runs when called, not at import, so it is not
+    module-level for the global-state rule."""
+    yield node
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef, ast.Lambda)):
+        return
+    for child in ast.iter_child_nodes(node):
+        yield from _walk_no_defs(child)
+
+
+def _module_level_stmts(tree: ast.Module):
+    """Top-level statements, excluding `if __name__ == \"__main__\"` blocks
+    (entry-point-only mutation is the documented pattern — dryrun/serve
+    self-provision placeholder devices there, before jax locks the count).
+    """
+    for node in tree.body:
+        if _is_main_guard(node):
+            continue
+        yield node
+
+
+def _environ_mutation(node: ast.AST) -> Optional[str]:
+    if isinstance(node, (ast.Assign, ast.AugAssign)):
+        tgts = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for tgt in tgts:
+            if isinstance(tgt, ast.Subscript) \
+                    and _attr_chain(tgt.value).endswith("environ"):
+                return "os.environ[...] assignment"
+    if isinstance(node, ast.Delete):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) \
+                    and _attr_chain(tgt.value).endswith("environ"):
+                return "del os.environ[...]"
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        if chain in ("os.putenv", "os.unsetenv"):
+            return chain
+        if chain.startswith("os.environ.") and chain.split(".")[-1] in (
+                "setdefault", "update", "pop", "clear", "__setitem__"):
+            return chain
+    return None
+
+
+def global_state_findings(relpath: str, source: str,
+                          tree: ast.Module) -> List[Finding]:
+    lines = source.splitlines()
+    out: List[Finding] = []
+    # (1) module-level mutation (import-time side effects: the PR-5 class)
+    for stmt in _module_level_stmts(tree):
+        for node in _walk_no_defs(stmt):
+            kind = _environ_mutation(node)
+            if kind:
+                out.append(_mk(
+                    "global-state", relpath, node, lines,
+                    f"module-level environment mutation ({kind}) — runs at "
+                    f"IMPORT time and clobbers caller state (the PR-5 "
+                    f"XLA_FLAGS bug)",
+                    "move it behind the `if __name__ == '__main__'` "
+                    "entry-point guard or into an explicit function the "
+                    "caller invokes"))
+            if isinstance(node, ast.Call) \
+                    and _attr_chain(node.func).endswith(
+                        "act_sharding.install"):
+                out.append(_mk(
+                    "global-state", relpath, node, lines,
+                    "module-level global-mesh install — leaks the mesh "
+                    "into every engine in the process",
+                    "use act_sharding.activated(mesh) scoped to the traces "
+                    "that need it"))
+    # (2) anywhere: install without an uninstall/activated pairing
+    has_pairing = ("uninstall" in source) or ("activated(" in source)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if (chain.endswith("act_sharding.install")
+                    or chain == "install" and "act_sharding" in source
+                    and "from .act_sharding import" in source) \
+                    and not has_pairing:
+                out.append(_mk(
+                    "global-state", relpath, node, lines,
+                    "act_sharding.install(...) with no uninstall/activated "
+                    "pairing in this module — an installed mesh outlives "
+                    "its owner and pins attn_verify off the Pallas path",
+                    "wrap the traces in act_sharding.activated(mesh), or "
+                    "pair install with uninstall in a finally block"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# time-in-jit
+# ---------------------------------------------------------------------------
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        chain = _attr_chain(target)
+        if chain.endswith("jax.jit") or chain == "jit":
+            return True
+        if chain.endswith("functools.partial") or chain == "partial":
+            if isinstance(dec, ast.Call) and dec.args \
+                    and _attr_chain(dec.args[0]).endswith("jit"):
+                return True
+    return False
+
+
+def time_in_jit_findings(relpath: str, source: str,
+                         tree: ast.Module) -> List[Finding]:
+    lines = source.splitlines()
+    out: List[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # the repo's jitted-body idiom: module jits + `_*_body` functions
+        # that jits and lax.while_loop wrap (spec_engine, serving)
+        if not (_is_jit_decorated(fn) or fn.name.endswith("_body")):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            parts = tuple(chain.split("."))
+            is_clock = parts[-2:] in {c for c in _CLOCK_CALLS} \
+                or chain in ("time.time", "time.perf_counter")
+            is_host_rng = (parts[:1] == ("random",)
+                           or parts[:2] == ("np", "random")
+                           or parts[:2] == ("numpy", "random"))
+            if is_clock or is_host_rng:
+                out.append(_mk(
+                    "time-in-jit", relpath, node, lines,
+                    f"host call {chain!r} inside jitted body {fn.name!r} — "
+                    f"executes once at TRACE time and bakes a constant "
+                    f"into the executable",
+                    "take the value as an argument (clocks) or use "
+                    "jax.random with a threaded key (RNG)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# host-sync (AST half: the serving-loop critical path)
+# ---------------------------------------------------------------------------
+_SYNC_CALLS = {"np.asarray": "device->host transfer",
+               "np.array": "device->host transfer",
+               "jax.device_get": "device->host transfer",
+               "numpy.asarray": "device->host transfer"}
+_SYNC_METHODS = {"block_until_ready": "forced device sync",
+                 "item": "scalar device->host sync",
+                 "tolist": "device->host transfer"}
+
+
+def serving_sync_findings(relpath: str, source: str, tree: ast.Module
+                          ) -> Tuple[List[Finding], List[Dict]]:
+    """Findings + full sync inventory for the continuous-serving critical
+    path.  EVERY sync found is an inventory entry (waived included — the
+    async-serving work needs the complete map); only un-waived ones are
+    findings."""
+    if not relpath.endswith("serving/engine.py"):
+        return [], []
+    lines = source.splitlines()
+    out: List[Finding] = []
+    inventory: List[Dict] = []
+
+    def scan(method: ast.AST) -> None:
+        for node in ast.walk(method):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            kind = _SYNC_CALLS.get(chain)
+            if kind is None and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_METHODS:
+                kind = _SYNC_METHODS[node.func.attr]
+                chain = node.func.attr
+            if kind is None:
+                continue
+            f = _mk(
+                "host-sync", relpath, node, lines,
+                f"{kind} ({chain}) in continuous-serving critical path "
+                f"method {method.name!r} — serializes the decode loop "
+                f"(ROADMAP: async serving)",
+                "defer the readback off the critical path, batch it with "
+                "an existing sync, or waive with "
+                "`# repro-lint: allow(host-sync): <why it cannot move>`")
+            out.append(f)
+            inventory.append({"file": relpath, "line": f.line,
+                              "method": method.name, "call": chain,
+                              "kind": kind, "code": f.context})
+
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        for method in cls.body:
+            if isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and method.name in CRITICAL_PATH_METHODS:
+                scan(method)
+    return out, inventory
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+AST_RULES = (pallas_scope_findings, tracer_branch_findings,
+             hash_constant_findings, global_state_findings,
+             time_in_jit_findings)
+
+
+def analyze_source(relpath: str, source: str
+                   ) -> Tuple[List[Finding], List[Dict]]:
+    """All AST findings (waivers applied) + sync inventory for one file."""
+    tree = ast.parse(source, filename=relpath)
+    waivers = scan_waivers(source)
+    findings: List[Finding] = []
+    for rule in AST_RULES:
+        findings += rule(relpath, source, tree)
+    sync, inventory = serving_sync_findings(relpath, source, tree)
+    findings += sync
+    findings = apply_waivers(findings, waivers)
+    for entry, f in zip(inventory,
+                        [f for f in findings if f.rule == "host-sync"]):
+        entry["waived"] = f.waived
+        entry["reason"] = f.waive_reason
+    return findings, inventory
+
+
+def run_level2(root: str) -> Tuple[List[Finding], List[Dict]]:
+    """Walk ``root`` (the ``src/repro`` package dir) and apply every AST
+    rule.  Returns (findings, host-sync inventory)."""
+    findings: List[Finding] = []
+    inventory: List[Dict] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            relpath = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            got, inv = analyze_source(relpath, source)
+            findings += got
+            inventory += inv
+    return findings, inventory

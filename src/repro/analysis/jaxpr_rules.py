@@ -1,0 +1,324 @@
+"""Level-1 (jaxpr/lowering) analyzers over the real engine entry points.
+
+Each rule traces the PRODUCTION step/admit/release bodies (the exact
+functions ``spec_step``/``admit_slot``/``release_slot`` and ``generate``'s
+while-body jit) on abstract states from ``registry.py`` — no execution, no
+model weights beyond the tiny registry params.
+
+Rules (each with the PR whose bug class it mechanizes):
+
+  - ``donation``        — every donated DecodeState leaf is actually
+    aliased into an output in the lowered module, and no two distinct
+    state leaves share one device buffer (PR 1: cache.init_state's SLSTM
+    shared-zeros buffer made donation alias two logical leaves).
+  - ``sharding-coverage`` — every DecodeState leaf resolves under
+    ``decode_state_pspec(strict=True)`` on every registry mesh with zero
+    ShardingFallbackWarnings (PR 7 added rng_key/temperature/top_p leaves;
+    nothing forced a pspec rule for them until a human noticed).
+  - ``trace-signature`` — the state's abstract signature is a FIXED POINT
+    of step/admit/release (out avals == in avals, weak types included), so
+    the serving loop compiles each body exactly once per shape.  Replaces
+    the per-PR compile-count spies with one reusable checker.
+  - ``host-sync``       — no callback/infeed/outfeed primitive inside the
+    jitted bodies (the AST half of this rule — the serving-loop sync scan
+    — lives in ast_rules.serving_sync_findings).
+"""
+from __future__ import annotations
+
+import re
+import warnings
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spec_engine import _admit_body, _release_body, _step_body
+from ..distributed import sharding as shd
+from ..models import cache as C
+from . import registry
+from .findings import Finding
+
+# ---------------------------------------------------------------------------
+# donation soundness
+# ---------------------------------------------------------------------------
+_ALIAS_ATTR = "tf.aliasing_output"
+
+
+def donation_findings(fn: Callable, args: Sequence, donated_tree,
+                      label: str) -> List[Finding]:
+    """Lower ``jit(fn, donate_argnums=0)`` and verify every leaf of the
+    donated first argument is aliased into an output.
+
+    JAX matches donated inputs to outputs by aval at lowering time: a
+    donated leaf whose shape/dtype matches no output is silently copied
+    (and warned about) instead of updated in place — for the serving state
+    that means a full KV-cache copy per step.  The lowered module carries
+    one ``tf.aliasing_output`` attribute per aliased parameter, so the
+    check is: #aliased == #donated leaves, and no donation warning fired.
+    """
+    n_donated = len(jax.tree_util.tree_leaves(donated_tree))
+    findings: List[Finding] = []
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        lowered = jax.jit(fn, donate_argnums=0).lower(*args)
+    for w in caught:
+        if "donated" in str(w.message).lower():
+            findings.append(Finding(
+                rule="donation", file=label, line=0,
+                message=f"unusable donation: {str(w.message).splitlines()[0]}",
+                hint="make the donated leaf's aval match an output leaf "
+                     "(or stop donating it)",
+                context=f"{label}::donation-warning"))
+    n_aliased = lowered.as_text().count(_ALIAS_ATTR)
+    if n_aliased < n_donated and not findings:
+        findings.append(Finding(
+            rule="donation", file=label, line=0,
+            message=f"only {n_aliased}/{n_donated} donated leaves are "
+                    f"aliased into outputs in the lowered module",
+            hint="every DecodeState leaf must round-trip through the body "
+                 "with an unchanged aval so XLA can update it in place",
+            context=f"{label}::alias-count"))
+    return findings
+
+
+def shared_buffer_findings(tree, label: str) -> List[Finding]:
+    """No two distinct pytree leaves may share one device buffer: donating
+    such a state aliases BOTH logical leaves onto one output buffer and
+    the second write corrupts the first (the PR-1 init_state bug, where
+    SLSTM groups reused a single zeros array)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    seen = {}
+    findings = []
+    for path, leaf in flat:
+        if not hasattr(leaf, "unsafe_buffer_pointer"):
+            continue
+        ptr = leaf.unsafe_buffer_pointer()
+        name = "/".join(shd._path_names(path))
+        if ptr in seen:
+            findings.append(Finding(
+                rule="donation", file=label, line=0,
+                message=f"leaves {seen[ptr]!r} and {name!r} share one "
+                        f"device buffer — donation would alias both onto "
+                        f"the same output",
+                hint="construct each leaf with its own buffer (no shared "
+                     "zeros/broadcast views) — cf. cache.init_state",
+                context=f"{label}::shared-buffer::{name}"))
+        else:
+            seen[ptr] = name
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry-point plumbing shared by the per-case checks
+# ---------------------------------------------------------------------------
+def _entry_points(built: registry.BuiltCase):
+    """(label, fn(state, ...), extra arg structs) for the three bodies."""
+    params, cfg, spec = built.params, built.cfg, built.spec
+    tables = built.tables
+    scal = jax.ShapeDtypeStruct((), jnp.int32)
+    scalf = jax.ShapeDtypeStruct((), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    step = lambda s: _step_body(params, cfg, spec, tables, s)
+    admit = lambda s, slot, prompt, mnt, eos, t, tp, k: _admit_body(
+        params, cfg, s, slot, prompt, mnt, eos, t, tp, k)
+    release = lambda s, slot: _release_body(s, slot)
+    return (
+        ("spec_step", step, ()),
+        ("admit_slot", admit,
+         (scal, built.prompt_struct(), scal, scal, scalf, scalf, key)),
+        ("release_slot", release, (scal,)),
+    )
+
+
+def check_donation(built: registry.BuiltCase) -> List[Finding]:
+    findings = shared_buffer_findings(
+        built.state, f"<case:{built.name}/empty_decode_state>")
+    struct = built.state_struct
+    for name, fn, extra in _entry_points(built):
+        findings += donation_findings(fn, (struct,) + tuple(extra), struct,
+                                      f"<case:{built.name}/{name}>")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# sharding coverage
+# ---------------------------------------------------------------------------
+def check_sharding_coverage(
+        built: registry.BuiltCase,
+        meshes: Sequence[registry.MeshShape] = registry.MESHES
+) -> List[Finding]:
+    findings: List[Finding] = []
+    paged = C.is_paged(built.state.model)
+    flat = jax.tree_util.tree_flatten_with_path(built.state)[0]
+    shd.reset_fallback_warnings()
+    for mesh in meshes:
+        label = f"<case:{built.name}/mesh:{mesh.name}>"
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            for path, leaf in flat:
+                name = "/".join(shd._path_names(path))
+                try:
+                    shd.decode_state_pspec(mesh, path, leaf, paged=paged,
+                                           strict=True)
+                except KeyError as e:
+                    findings.append(Finding(
+                        rule="sharding-coverage", file=label, line=0,
+                        message=f"DecodeState leaf {name!r} has no "
+                                f"decode_state_pspec rule: {e.args[0]}",
+                        hint="add the leaf to distributed/sharding.py's "
+                             "DECODE_STATE_LEAF_RULES (and a pspec branch "
+                             "if it needs more than slot-row sharding)",
+                        context=f"sharding::{name}"))
+        for w in caught:
+            if issubclass(w.category, shd.ShardingFallbackWarning):
+                findings.append(Finding(
+                    rule="sharding-coverage", file=label, line=0,
+                    message="replication fallback during state resolution: "
+                            + str(w.message).splitlines()[0],
+                    hint="registry dims are sized to divide every registry "
+                         "mesh — a fallback here means a new leaf hit the "
+                         "loud resolve_axis chain; probe with warn=False "
+                         "or add a real rule",
+                    context=f"sharding-fallback::{mesh.name}"))
+    shd.reset_fallback_warnings()
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# trace-signature stability
+# ---------------------------------------------------------------------------
+def _aval_tuple(x):
+    return (tuple(x.shape), jnp.dtype(x.dtype).name,
+            bool(getattr(x, "weak_type", False)))
+
+
+def signature_findings(fn: Callable, in_struct, label: str,
+                       extra_args: Sequence = ()) -> List[Finding]:
+    """The state signature must be a FIXED POINT of ``fn``: identical tree
+    structure and per-leaf (shape, dtype, weak_type) in and out.  Any
+    drift (an upcast stat, a weak-type scalar, a forgotten new leaf in a
+    reset path) makes the serving loop retrace/recompile on every
+    iteration — the class of bug the ad-hoc compile-count spies caught
+    one instance at a time."""
+    try:
+        out = jax.eval_shape(fn, in_struct, *extra_args)
+    except Exception as e:  # a body that fails to trace is its own finding
+        return [Finding(
+            rule="trace-signature", file=label, line=0,
+            message=f"entry point failed to trace abstractly: {e!r:.200}",
+            hint="the analyzer traces the real body on registry shapes; "
+                 "fix the trace error or extend the registry",
+            context=f"{label}::trace-error")]
+    findings: List[Finding] = []
+    in_paths = {"/".join(shd._path_names(p)): l for p, l in
+                jax.tree_util.tree_flatten_with_path(in_struct)[0]}
+    out_paths = {"/".join(shd._path_names(p)): l for p, l in
+                 jax.tree_util.tree_flatten_with_path(out)[0]}
+    for name in sorted(set(in_paths) | set(out_paths)):
+        if name not in in_paths or name not in out_paths:
+            which = "output" if name not in in_paths else "input"
+            findings.append(Finding(
+                rule="trace-signature", file=label, line=0,
+                message=f"state leaf {name!r} exists only in the {which} "
+                        f"signature — the loop's state tree changes shape "
+                        f"across calls",
+                hint="thread the leaf through every body (step AND the "
+                     "admit/release resets)",
+                context=f"signature::{name}::structure"))
+            continue
+        a, b = _aval_tuple(in_paths[name]), _aval_tuple(out_paths[name])
+        if a != b:
+            findings.append(Finding(
+                rule="trace-signature", file=label, line=0,
+                message=f"state leaf {name!r} signature drifts across the "
+                        f"call: in {a} vs out {b} — every loop iteration "
+                        f"retraces",
+                hint="pin the leaf's dtype/shape (watch weak-type scalars "
+                     "from Python literals and silent upcasts)",
+                context=f"signature::{name}::aval"))
+    return findings
+
+
+def check_trace_signature(built: registry.BuiltCase) -> List[Finding]:
+    findings: List[Finding] = []
+    struct = built.state_struct
+    for leaf_path, leaf in jax.tree_util.tree_flatten_with_path(struct)[0]:
+        if jnp.dtype(leaf.dtype).itemsize > 4:
+            name = "/".join(shd._path_names(leaf_path))
+            findings.append(Finding(
+                rule="trace-signature",
+                file=f"<case:{built.name}/state>", line=0,
+                message=f"64-bit leaf {name!r} ({leaf.dtype}) in the "
+                        f"serving state — an x64 leak splits signatures "
+                        f"between x64/x32 processes",
+                hint="keep serving-state leaves <= 32-bit",
+                context=f"x64::{name}"))
+    for name, fn, extra in _entry_points(built):
+        findings += signature_findings(fn, struct,
+                                       f"<case:{built.name}/{name}>", extra)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# host-sync (jaxpr half)
+# ---------------------------------------------------------------------------
+SYNC_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "infeed", "outfeed", "debug_print",
+})
+
+
+def _walk_jaxpr(jaxpr, hits: List[str]) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in SYNC_PRIMITIVES:
+            hits.append(eqn.primitive.name)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                name = type(sub).__name__
+                if name == "ClosedJaxpr":
+                    _walk_jaxpr(sub.jaxpr, hits)
+                elif name == "Jaxpr":
+                    _walk_jaxpr(sub, hits)
+
+
+def jaxpr_sync_findings(fn: Callable, args: Sequence,
+                        label: str) -> List[Finding]:
+    """Flag callback/infeed primitives inside a jitted body: each one
+    forces a device<->host round-trip per step, serializing the decode
+    critical path (the inventory the async-serving work starts from)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    hits: List[str] = []
+    _walk_jaxpr(jaxpr.jaxpr, hits)
+    return [Finding(
+        rule="host-sync", file=label, line=0,
+        message=f"host-sync primitive {p!r} inside the jitted body",
+        hint="move host work outside the step (or waive with an inline "
+             "repro-lint comment at the call site if it is debug-only)",
+        context=f"{label}::prim::{p}")
+        for p in sorted(set(hits))]
+
+
+def check_host_sync(built: registry.BuiltCase) -> List[Finding]:
+    findings: List[Finding] = []
+    for name, fn, extra in _entry_points(built):
+        findings += jaxpr_sync_findings(
+            fn, (built.state_struct,) + tuple(extra),
+            f"<case:{built.name}/{name}>")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+LEVEL1_CHECKS = (check_donation, check_sharding_coverage,
+                 check_trace_signature, check_host_sync)
+
+
+def run_level1(cases: Optional[Sequence[registry.Case]] = None
+               ) -> List[Finding]:
+    findings: List[Finding] = []
+    for case in (cases if cases is not None else registry.CASES):
+        built = registry.build_case(case)
+        for check in LEVEL1_CHECKS:
+            findings += check(built)
+    return findings

@@ -1,0 +1,152 @@
+"""Representative production configs the jaxpr-level analyzers trace.
+
+The engine's correctness contracts (one ``spec_step`` trace, donation
+soundness, full sharding coverage) are claims about the REAL entry points
+under every serving mode, so the analyzers trace the real functions
+(``_step_body``/``_admit_body``/``_release_body`` — exactly what
+``spec_step``/``admit_slot``/``release_slot`` and ``generate``'s while-body
+jit) on abstract ``DecodeState`` inputs built from this registry:
+
+    linear/paged x greedy/mixed x sampled x tree x adaptive arms
+
+on a deliberately tiny 2-layer model (the contracts are structural — they
+do not depend on model size, and a tiny model keeps ``repro-lint`` a
+seconds-scale CI gate).  The mesh axis of the matrix is covered by
+resolving every case's state against the registry's mesh shapes with
+``decode_state_pspec(strict=True)`` (jaxpr_rules.check_sharding_coverage);
+*multi-device* trace checks need real devices and stay in
+tests/test_sharded_serving.py's compile-count spies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ngram_tables import NGramTables
+from ..core.spec_engine import (DecodeState, PagedConfig, SpecConfig,
+                                empty_decode_state)
+from ..models import model as M
+from ..models.config import ModelConfig
+
+NUM_SLOTS = 4          # divisible by every registry mesh's batch chain
+PROMPT_LEN = 8
+MAX_NEW = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshShape:
+    """Stand-in for jax.sharding.Mesh in PURE SPEC RESOLUTION: the
+    decode_state_pspec/resolve_axis rules only consult ``mesh.shape``, so
+    coverage checks need no physical devices (CI runs on one CPU)."""
+    name: str
+    shape: Dict[str, int]
+
+
+# the mesh/1-device axis of the registry matrix
+MESHES: Tuple[MeshShape, ...] = (
+    MeshShape("1dev", {"data": 1, "model": 1}),
+    MeshShape("2x2", {"data": 2, "model": 2}),
+    MeshShape("pod3d", {"pod": 2, "data": 2, "model": 2}),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    name: str
+    spec: SpecConfig
+    paged: Optional[PagedConfig] = None
+
+    @property
+    def needs_tables(self) -> bool:
+        return self.spec.strategy != "greedy"
+
+
+def _spec(**kw) -> SpecConfig:
+    base = dict(k=4, w=3, q=1, strategy="mixed", max_new_tokens=MAX_NEW)
+    base.update(kw)
+    return SpecConfig(**base)
+
+
+CASES: Tuple[Case, ...] = (
+    Case("linear-greedy", _spec(strategy="greedy")),
+    Case("linear-mixed", _spec()),
+    Case("linear-sampled", _spec(sampling=True)),
+    Case("linear-adaptive", _spec(arms=((1, 0), (2, 2), (4, 3)))),
+    Case("tree", _spec(w=2, tree=True, tree_branch=2)),
+    Case("paged-mixed", _spec(), paged=PagedConfig(num_pages=0, page_size=8)),
+)
+
+
+@functools.lru_cache(maxsize=None)
+def tiny_config() -> ModelConfig:
+    # dims chosen divisible by every registry mesh axis chain (heads 4,
+    # kv 2, ffn 128, slots 4) so sharding coverage sees zero legitimate
+    # replication fallbacks — any ShardingFallbackWarning is a finding
+    return ModelConfig(name="lint-tiny", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=61,
+                       param_dtype=jnp.float32,
+                       compute_dtype=jnp.float32).validate()
+
+
+@functools.lru_cache(maxsize=None)
+def tiny_params():
+    return M.init_params(jax.random.PRNGKey(0), tiny_config())
+
+
+@functools.lru_cache(maxsize=None)
+def tiny_tables() -> NGramTables:
+    """Value-free stand-in tables: drafting only gathers from them, so
+    zeros trace/lower identically to model-built tables."""
+    cfg = tiny_config()
+    k_max, w_max = 8, 8
+    return NGramTables(
+        unigram_topk=jnp.zeros((k_max,), jnp.int32),
+        bigram_topk=jnp.zeros((cfg.vocab_size, k_max), jnp.int32),
+        bigram_chain=jnp.zeros((cfg.vocab_size, w_max), jnp.int32))
+
+
+def buf_size(spec: SpecConfig) -> int:
+    # mirrors ServingEngine._init_continuous's sizing arithmetic
+    return PROMPT_LEN + MAX_NEW + spec.w + 2
+
+
+@dataclasses.dataclass
+class BuiltCase:
+    case: Case
+    cfg: ModelConfig
+    params: Dict
+    tables: Optional[NGramTables]
+    state: DecodeState            # concrete tiny state (cheap: no params)
+
+    @property
+    def name(self) -> str:
+        return self.case.name
+
+    @property
+    def spec(self) -> SpecConfig:
+        return self.case.spec
+
+    @property
+    def state_struct(self):
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+
+    def prompt_struct(self):
+        return jax.ShapeDtypeStruct((PROMPT_LEN,), jnp.int32)
+
+
+def build_case(case: Case) -> BuiltCase:
+    cfg = tiny_config()
+    state = empty_decode_state(cfg, case.spec, NUM_SLOTS,
+                               buf_size(case.spec), paged=case.paged)
+    return BuiltCase(case=case, cfg=cfg, params=tiny_params(),
+                     tables=tiny_tables() if case.needs_tables else None,
+                     state=state)
+
+
+def built_cases() -> Tuple[BuiltCase, ...]:
+    return tuple(build_case(c) for c in CASES)

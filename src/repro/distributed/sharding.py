@@ -302,6 +302,37 @@ def state_shardings(mesh: Mesh, state_shapes) -> Any:
 _STATE_ROW_FIELDS = ("buf", "buf_len", "prompt_len", "budget", "eos_id",
                      "done", "active", "rng_key", "temperature", "top_p")
 
+# The single source of truth for WHICH DecodeState leaves have a sharding
+# rule — ``decode_state_pspec(strict=True)`` raises KeyError for any leaf
+# matching no entry, and repro-lint's sharding-coverage analyzer runs
+# strict over every registry config (so adding a DecodeState leaf without
+# extending this table fails CI instead of silently replicating — the
+# PR-7 rng_key/temperature/top_p class).  Top-level fields match on the
+# path HEAD; model-cache leaves match on the path TAIL (they sit under
+# ``model``, arbitrarily nested per layer).
+DECODE_STATE_LEAF_RULES: Dict[str, str] = {
+    # --- top-level per-slot rows (match on path head) ---
+    **{f: "per-slot row: slot axis over ('pod','data'), rest replicated"
+       for f in _STATE_ROW_FIELDS},
+    "stats": "telemetry rows: slot axis over ('pod','data')",
+    # --- model-cache leaves (match on path tail, under `model`) ---
+    "cur_len": "scalar step counter: replicated",
+    "k": "KV cache: kv-heads over 'model' else sequence fallback; "
+         "paged pool: page axis over ('pod','data')[+'model']",
+    "v": "same rule as 'k'",
+    "conv": "mamba conv window: channel dim over 'ffn'->'model'",
+    "ssm": "mamba ssm state: inner dim over 'ffn'->'model'",
+    "C": "mlstm covariance: heads over 'model' else head_dim",
+    "n": "mlstm/slstm normalizer: heads over 'model'",
+    "h": "slstm hidden: heads over 'model'",
+    "c": "slstm cell: heads over 'model'",
+    "m": "mlstm/slstm max-stabilizer: heads over 'model'",
+    "page_table": "per-slot page map: slot axis over ('pod','data')",
+    "n_pages": "per-slot page count: slot axis over ('pod','data')",
+    "free_list": "free-page stack: replicated (device-identical mutation)",
+    "free_top": "free-stack pointer: replicated",
+}
+
 
 def _page_axes(mesh: Mesh, num_pages: int, kv_sharded: bool):
     """The paged pool's page axis shards like the linear cache's
@@ -324,7 +355,8 @@ def _page_axes(mesh: Mesh, num_pages: int, kv_sharded: bool):
     return axes if len(axes) > 1 else axes[0]
 
 
-def decode_state_pspec(mesh: Mesh, path, leaf, *, paged: bool = False) -> P:
+def decode_state_pspec(mesh: Mesh, path, leaf, *, paged: bool = False,
+                       strict: bool = False) -> P:
     """PartitionSpec for ONE leaf of a full ``DecodeState`` pytree.
 
     Extends ``state_pspec`` (which covers the model-cache leaves) with the
@@ -334,9 +366,22 @@ def decode_state_pspec(mesh: Mesh, path, leaf, *, paged: bool = False) -> P:
     and the free stack is replicated (it is mutated identically on every
     device — a tiny int32 vector, and replication keeps alloc/free/grow
     collective-free).
+
+    ``strict=True`` raises ``KeyError`` for a leaf matching no
+    ``DECODE_STATE_LEAF_RULES`` entry instead of silently replicating it —
+    the mode repro-lint's sharding-coverage analyzer runs in.  The engine
+    itself stays non-strict: at serve time a replicated unknown leaf is
+    correct (just unreviewed), and the lint gate is where the review is
+    forced.
     """
     names = _path_names(path)
     top, name = names[0], names[-1]
+    if strict and top not in DECODE_STATE_LEAF_RULES \
+            and name not in DECODE_STATE_LEAF_RULES:
+        raise KeyError(
+            f"DecodeState leaf {'/'.join(names)!r} matches no "
+            f"DECODE_STATE_LEAF_RULES entry — add one (plus a pspec branch "
+            f"if it needs more than replication/slot-row sharding)")
     shape = tuple(leaf.shape)
     if top in _STATE_ROW_FIELDS or top == "stats":
         return P(_batch_axes(mesh, shape[0]), *([None] * (len(shape) - 1)))
@@ -357,17 +402,19 @@ def decode_state_pspec(mesh: Mesh, path, leaf, *, paged: bool = False) -> P:
     return state_pspec(mesh, path, leaf)
 
 
-def decode_state_shardings(mesh: Mesh, state) -> Any:
+def decode_state_shardings(mesh: Mesh, state, *, strict: bool = False) -> Any:
     """NamedSharding pytree for a ``DecodeState`` (or shape structs of one).
 
     Detects the paged layout from the state itself ("page_table" under
-    ``model``), so callers pass the state they actually built.
+    ``model``), so callers pass the state they actually built.  ``strict``
+    is forwarded to ``decode_state_pspec``.
     """
     paged = isinstance(getattr(state, "model", None), dict) \
         and "page_table" in state.model
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
-            mesh, decode_state_pspec(mesh, path, leaf, paged=paged)),
+            mesh, decode_state_pspec(mesh, path, leaf, paged=paged,
+                                     strict=strict)),
         state)
 
 

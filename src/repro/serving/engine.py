@@ -496,17 +496,29 @@ class ServingEngine:
 
     def _retire_finished(self) -> List[Request]:
         state = self._cont_state
+        # The scheduler's one unavoidable per-step sync: slot reuse is a
+        # host decision, so the done flags must come back every step.  The
+        # ROADMAP's async-serving item replaces this with a lagged readback;
+        # until then it is THE baseline entry in BENCH_syncmap.json.
+        # repro-lint: allow(host-sync): scheduling branches on done flags host-side; async serving (ROADMAP) is the structural fix
         done = np.asarray(state.done)
         if not done[[s for s, _ in self._slots.occupied()]].any():
             return []
-        # one device->host transfer per array, not per retired slot
-        blen = np.asarray(state.buf_len)
-        plen = np.asarray(state.prompt_len)
-        buf = np.asarray(state.buf)
-        calls_np = np.asarray(state.stats["calls"])
-        tokens_np = np.asarray(state.stats["tokens"])
-        accept_hist_np = np.asarray(state.stats["accept_hist"])
-        arm_pulls_np = (np.asarray(state.stats["arm_pulls"])
+        if self.paged:
+            # pool peak: occupancy only falls at release, so sampling here
+            # (before this round's frees) sees every high-water mark
+            # repro-lint: allow(host-sync): runs only on retire rounds, behind the done.any() gate — off the steady-state step path
+            in_use = self._pool_pages - int(np.asarray(state.model["free_top"]))
+            self._pool_peak = max(self._pool_peak, in_use)
+        # one device->host transfer per array, not per retired slot, and
+        # only on rounds that actually retire (behind the done.any() gate)
+        blen = np.asarray(state.buf_len)        # repro-lint: allow(host-sync): batched retire-round readback
+        plen = np.asarray(state.prompt_len)     # repro-lint: allow(host-sync): batched retire-round readback
+        buf = np.asarray(state.buf)             # repro-lint: allow(host-sync): batched retire-round readback
+        calls_np = np.asarray(state.stats["calls"])    # repro-lint: allow(host-sync): batched retire-round readback
+        tokens_np = np.asarray(state.stats["tokens"])  # repro-lint: allow(host-sync): batched retire-round readback
+        accept_hist_np = np.asarray(state.stats["accept_hist"])  # repro-lint: allow(host-sync): batched retire-round readback
+        arm_pulls_np = (np.asarray(state.stats["arm_pulls"])  # repro-lint: allow(host-sync): batched retire-round readback
                         if self._arms else None)
         retired: List[Request] = []
         for slot, req in self._slots.occupied():
@@ -524,6 +536,7 @@ class ServingEngine:
                 # verify calls that committed exactly n tokens (0..w+1) —
                 # the paper's Fig. 4 ablation, per request (read BEFORE
                 # release zeroes the slot's stats rows)
+                # repro-lint: allow(host-sync): numpy-side tolist on the already-transferred accept_hist_np, not a device sync
                 "accept_hist": accept_hist_np[slot].tolist(),
                 # per-request admit->retire latency; deliberately NOT named
                 # wall_time_s (which in serve_all is the shared whole-batch
@@ -658,10 +671,12 @@ class ServingEngine:
         # paying a device->host sync on every step to detect it).
         if len(self._slots):
             self._cont_state = self._run_step(self._cont_state)
-            if self.paged:
-                in_use = self._pool_pages - int(
-                    np.asarray(self._cont_state.model["free_top"]))
-                self._pool_peak = max(self._pool_peak, in_use)
+            # peak-pool telemetry is NOT sampled here: reading free_top
+            # back every step was a per-step device->host sync on the
+            # decode critical path (repro-lint host-sync found it).  Pool
+            # occupancy only ever falls at release, so sampling it at
+            # retirement entry (before the frees) and in pool_stats()
+            # observes every high-water mark syncs-free on the hot path.
         return retired
 
     def reset_pool_counters(self) -> None:
@@ -685,10 +700,14 @@ class ServingEngine:
         queue head could not reserve pages — not distinct requests."""
         if not self.paged or self._cont_state is None:
             return {}
+        free = int(np.asarray(self._cont_state.model["free_top"]))
+        # fold current occupancy into the peak: step() no longer samples
+        # it per step (that was a hot-path sync), so a caller reading
+        # stats mid-flight still observes at least the occupancy it sees
+        self._pool_peak = max(self._pool_peak, self._pool_pages - free)
         return {"num_pages": self._pool_pages,
                 "page_size": self._page_size,
-                "free_pages": int(np.asarray(
-                    self._cont_state.model["free_top"])),
+                "free_pages": free,
                 "reserved_pages": sum(self._page_reserved.values()),
                 "peak_pages": self._pool_peak,
                 "deferrals": self._deferrals,
